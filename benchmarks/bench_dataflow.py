@@ -1,0 +1,42 @@
+"""Paper §III (dataflow bandwidth): weight-stationary vs output-stationary
+bytes/cycle — the paper's equation reproduced with ITA's parameters
+(N=16 PEs, M=64-wide dots, D=24-bit partials), plus the TPU analogue:
+HBM bytes moved by the two Pallas matmul schedules as a function of the
+weight-reuse block size (the paper's "weights reused M times").
+"""
+
+
+def ita_bandwidth_bits(n=16, m=64, d=24):
+    ws = 8 * (m + 3 * n) + 2 * n * d          # weight stationary (paper)
+    os_ = 8 * (n * m + 3 * n) + 2 * n * d     # output stationary (paper)
+    return ws, os_
+
+
+def pallas_traffic_bytes(mm, kk, nn, bm, bn, bk):
+    """HBM traffic model for the int8 matmul kernel at (M,K,N) with blocks
+    (bm,bn,bk): weight tile fetched once per (m-block, n, k), i.e. reused
+    over bm rows — ITA's M-fold reuse ≙ bm."""
+    x_reads = mm * kk * (nn // bn)            # x streamed per n-block
+    w_reads = kk * nn * (mm // bm)            # weights re-fetched per m-block
+    out_writes = mm * nn
+    return x_reads + w_reads + out_writes
+
+
+def main():
+    ws, os_ = ita_bandwidth_bits()
+    print(f"dataflow/ita_paper_ws_bits_per_cycle,0,{ws}")
+    print(f"dataflow/ita_paper_os_bits_per_cycle,0,{os_}")
+    print(f"dataflow/ita_paper_saving,0,{os_ / ws:.3f}")
+
+    # TPU analogue: 4096x4096 weight, 1M activations rows (qwen2-ish layer)
+    mm, kk, nn = 65536, 4096, 4096
+    for bm in (128, 256, 1024, 4096):
+        t = pallas_traffic_bytes(mm, kk, nn, bm, 128, 512)
+        print(f"dataflow/pallas_ws_traffic_bytes/bm{bm},0,{t}")
+    base = pallas_traffic_bytes(mm, kk, nn, 128, 128, 512)
+    best = pallas_traffic_bytes(mm, kk, nn, 4096, 128, 512)
+    print(f"dataflow/pallas_reuse_saving,0,{base / best:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks (interpret mode -> correctness + VMEM/footprint
+accounting; wall numbers are CPU-interpret and NOT TPU times).
+
+Derived columns report the *structural* quantities that determine TPU
+performance: VMEM working set per grid step and HBM bytes per output tile
+for the chosen BlockSpecs (what you reason about on the lowered IR).
+"""
+
+import numpy as np
+
+
+def vmem_rows():
+    rows = []
+    # ita_attention onepass: q(bq,d)i8 + k/v(bkv,d)i8 + acc(bq,d)f32 +
+    # stats 2*(bq,1)i32 + logits tile (bq,bkv)i32
+    for bq, bkv, d in [(128, 128, 64), (128, 128, 128), (256, 512, 128)]:
+        vmem = bq * d + 2 * bkv * d + bq * d * 4 + 2 * bq * 4 \
+            + bq * bkv * 4
+        rows.append((f"kernels/ita_attention_vmem_bytes/bq{bq}_bkv{bkv}_d{d}",
+                     vmem))
+    # int8 matmul: x(bm,bk) + w(bk,bn) + acc(bm,bn)i32
+    for bm, bn, bk in [(256, 128, 128), (1024, 128, 512)]:
+        vmem = bm * bk + bk * bn + bm * bn * 4
+        rows.append((f"kernels/int8_matmul_vmem_bytes/bm{bm}_bn{bn}_bk{bk}",
+                     vmem))
+    return rows
+
+
+def interpret_check_rows():
+    """Tiny correctness re-check so `benchmarks.run` exercises kernels."""
+    import jax.numpy as jnp
+
+    from repro.kernels.int8_matmul.ops import int8_matmul
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+    from repro.kernels.ita_attention import ref as AR
+    from repro.kernels.ita_attention.ops import ita_attention
+
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, (64, 128), dtype=np.int8)
+    w = rng.integers(-128, 128, (128, 64), dtype=np.int8)
+    mult = np.float32(0.001)
+    out = int8_matmul(jnp.asarray(x), jnp.asarray(w), None, mult,
+                      block_m=32, block_n=32, block_k=64)
+    ref = int8_matmul_ref(jnp.asarray(x), jnp.asarray(w),
+                          jnp.zeros((64,), jnp.int32),
+                          jnp.broadcast_to(mult, (64,)))
+    ok_mm = bool(jnp.all(out == ref))
+
+    q = rng.integers(-128, 128, (1, 2, 64, 32), dtype=np.int8)
+    k = rng.integers(-128, 128, (1, 2, 128, 32), dtype=np.int8)
+    v = rng.integers(-128, 128, (1, 2, 128, 32), dtype=np.int8)
+    s = np.float32(0.05)
+    o = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                      s, s, s, np.float32(0.02), causal=True,
+                      block_q=32, block_kv=64)
+    ref2 = AR.ita_attention_stream_ref(
+        jnp.asarray(q.reshape(2, 64, 32)), jnp.asarray(k.reshape(2, 128, 32)),
+        jnp.asarray(v.reshape(2, 128, 32)),
+        np.float32(s * s / (np.sqrt(32) * 0.021660849392498294)),
+        np.float32(s / 0.02), 128, causal=True, block_kv=64)
+    ok_att = bool(jnp.all(o.reshape(2, 64, 32) == ref2))
+    return [("kernels/int8_matmul_exact_vs_ref", int(ok_mm)),
+            ("kernels/ita_attention_exact_vs_ref", int(ok_att))]
+
+
+def main():
+    for name, val in vmem_rows() + interpret_check_rows():
+        print(f"{name},0,{val}")
+
+
+if __name__ == "__main__":
+    main()

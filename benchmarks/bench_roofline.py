@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads the JSONL written by ``repro.launch.dryrun --all --out <file>`` and
+prints per-cell rows; with no file present prints a short notice (the
+dry-run is a separate long-running step).
+"""
+
+import json
+import os
+
+DEFAULT_PATHS = ("results/dryrun_single.jsonl", "/tmp/dryrun_single.jsonl")
+
+
+def load(path=None):
+    paths = [path] if path else DEFAULT_PATHS
+    for p in paths:
+        if p and os.path.exists(p):
+            with open(p) as f:
+                return [json.loads(l) for l in f if l.strip()]
+    return []
+
+
+def main():
+    recs = load(os.environ.get("REPRO_DRYRUN_JSONL"))
+    if not recs:
+        print("roofline/no_dryrun_artifacts_found,0,0")
+        return
+    for r in recs:
+        if r.get("status") != "ok":
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,FAIL")
+            continue
+        ro = r["roofline"]
+        step = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        mfu = ro["model_flops"] / (256 * 197e12 * step) if step else 0
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+              f",{step*1e6:.0f}"
+              f",bottleneck={ro['bottleneck']}"
+              f";compute_s={ro['compute_s']:.3f}"
+              f";memory_s={ro['memory_s']:.3f}"
+              f";collective_s={ro['collective_s']:.3f}"
+              f";useful={ro['useful_ratio']:.2f}"
+              f";roofline_mfu={mfu:.3f}")
+
+
+if __name__ == "__main__":
+    main()

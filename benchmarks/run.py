@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+| module            | paper reference                          |
+|-------------------|------------------------------------------|
+| bench_softmax_mae | §V-C softmax MAE (ITA vs I-BERT)         |
+| bench_attention   | §V-D speedup + Table I (int8/bf16, bytes)|
+| bench_dataflow    | §III weight-stationary bandwidth eq.     |
+| bench_kernels     | kernel VMEM/traffic structure + checks   |
+| bench_roofline    | §Roofline table from dry-run artifacts   |
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_attention, bench_dataflow, bench_kernels,
+                            bench_roofline, bench_softmax_mae)
+    print("name,us_per_call,derived")
+    for mod in (bench_softmax_mae, bench_dataflow, bench_attention,
+                bench_kernels, bench_roofline):
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod.__name__}/ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+            raise
+
+
+if __name__ == '__main__':
+    main()

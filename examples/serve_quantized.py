@@ -1,0 +1,77 @@
+"""End-to-end serving driver (the paper is an *inference* accelerator, so
+serving is the canonical e2e example): a small LM served with batched
+requests through the ITA integer pipeline — int8 KV cache, integer
+streaming softmax at prefill, direct integer attention at decode — and a
+side-by-side float-attention run for output comparison.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, init_caches, init_model
+
+CFG_BASE = dict(
+    name="serve-demo", family="dense",
+    d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+    d_ff=1024, vocab_size=2048,
+    layer_groups=((("attn",), 4),),
+    tie_embeddings=True, dtype="float32",
+)
+
+BATCH, PROMPT, GEN = 8, 48, 24
+
+
+def serve(cfg, params, prompts):
+    prefill = jax.jit(lambda p, t, c: forward(p, t, cfg, mode="prefill",
+                                              caches=c)[:2])
+    decode = jax.jit(lambda p, t, c, pos: forward(p, t, cfg, mode="decode",
+                                                  caches=c, pos0=pos)[:2],
+                     donate_argnums=(2,))
+    caches = init_caches(cfg, BATCH, max_len=PROMPT + GEN)
+    t0 = time.time()
+    logits, caches = prefill(params, prompts, caches)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    toks = [tok]
+    for i in range(GEN - 1):
+        logits, caches = decode(params, tok, caches,
+                                jnp.asarray(PROMPT + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(tok)
+    out = jnp.concatenate(toks, 1)
+    jax.block_until_ready(out)
+    return out, time.time() - t0
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cfg_f = ModelConfig(**CFG_BASE)
+    cfg_q = ModelConfig(**{**CFG_BASE, "attention_impl": "ita"})
+    params = init_model(key, cfg_f)
+    params_q = init_model(key, cfg_q)      # same weights + quant scales
+
+    prompts = jax.random.randint(key, (BATCH, PROMPT), 0, cfg_f.vocab_size)
+    out_f, t_f = serve(cfg_f, params, prompts)
+    out_q, t_q = serve(cfg_q, params_q, prompts)
+
+    agree = float((out_f == out_q).mean())
+    kv_bytes_f = PROMPT * cfg_f.n_kv_heads * cfg_f.head_dim * 2 * 4
+    kv_bytes_q = PROMPT * cfg_f.n_kv_heads * cfg_f.head_dim * 2 * 1
+    print(f"[serve] batch={BATCH} prompt={PROMPT} gen={GEN}")
+    print(f"[serve] float attention: {t_f*1e3:.0f} ms; "
+          f"ITA integer attention: {t_q*1e3:.0f} ms (CPU, indicative)")
+    print(f"[serve] greedy-token agreement float vs ITA-int8: {agree:.2%} "
+          "(random weights -> near-uniform logits; QAT-trained models "
+          "agree far more, see examples/train_qat_lm.py)")
+    print(f"[serve] KV cache bytes/token/layer: float32 {kv_bytes_f} "
+          f"-> int8 {kv_bytes_q} (4x smaller)")
+    print("[serve] sample (ITA):", np.asarray(out_q)[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Async, mesh-independent checkpointing.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        meta.json            step, pytree structure, shapes/dtypes
+        leaf_00000.npy ...   one file per pytree leaf
+
+Design points for the 1000+ node posture:
+- **Mesh independence / elastic restart**: leaves are written as *full*
+  (unsharded) arrays; restore re-shards onto whatever mesh the restarted
+  job has — a checkpoint taken on 2 pods restores on 1 or 4. (On a real
+  multi-host fleet each host writes only the shards it owns —
+  ``jax.experimental.multihost_utils`` / ocdbt-style; the addressing logic
+  here is identical, the container is single-process.)
+- **Async**: device→host transfer happens on the caller, file IO in a
+  background thread; the train loop is blocked only for the transfer.
+- **Atomicity**: written into ``.tmp`` and renamed, so a crash mid-write
+  never corrupts the latest checkpoint (restart-safe).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=2)
+        self._pending = None
+        self._lock = threading.Lock()
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: dict | None = None,
+             blocking: bool = False):
+        """Snapshot ``tree`` (any pytree of jax/np arrays) at ``step``."""
+        leaves, treedef = jax.tree.flatten(tree)
+        host_leaves = [np.asarray(l) for l in leaves]       # device->host
+        meta = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "extra": extra or {},
+            "shapes": [list(l.shape) for l in host_leaves],
+            "dtypes": [str(l.dtype) for l in host_leaves],
+        }
+        fut = self._pool.submit(self._write, step, host_leaves, meta)
+        with self._lock:
+            self._pending = fut
+        if blocking:
+            fut.result()
+        return fut
+
+    def _write(self, step, host_leaves, meta):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = f"{final}.{os.getpid()}.{threading.get_ident()}.tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        for i, leaf in enumerate(host_leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def wait(self):
+        with self._lock:
+            fut = self._pending
+        if fut is not None:
+            fut.result()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1].split(".")[0]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None) -> tuple:
+        """Restore into the structure of ``template``; re-shard with
+        ``shardings`` (pytree of NamedSharding) when given — this is the
+        elastic-restart path onto a different mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        leaves, treedef = jax.tree.flatten(template)
+        assert len(leaves) == meta["n_leaves"], "pytree structure changed"
+        out = []
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(leaves))
+        for i, (tmpl, sh) in enumerate(zip(leaves, shard_leaves)):
+            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out), meta

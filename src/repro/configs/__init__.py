@@ -1,0 +1,1 @@
+from repro.configs.base import SHAPES, SMOKE_SHAPE, ModelConfig, ShapeConfig  # noqa: F401

@@ -1,0 +1,99 @@
+"""Model / shape configuration dataclasses.
+
+Every assigned architecture is a ``ModelConfig`` (src/repro/configs/<id>.py)
+whose layer stack is expressed as *layer groups*: ``(pattern, n_periods)``
+pairs, each scanned with ``lax.scan`` over stacked per-period parameters
+(compact HLO at 100-layer scale). Pattern elements name block kinds:
+
+    attn   global self-attention          local  sliding window (local_window)
+    swa    sliding window (window)        cross  cross-attention (+MLP)
+    attn_cross  self+cross+MLP (whisper decoder)
+    rglru  RG-LRU recurrent block         rwkv   RWKV6 time+channel mix
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense|moe|hybrid|ssm|audio|vlm
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    layer_groups: Tuple[Tuple[Tuple[str, ...], int], ...]
+
+    mlp_type: str = "swiglu"          # swiglu|geglu|gelu|moe|rwkv
+    norm_type: str = "rmsnorm"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int = 0                   # swa kind
+    local_window: int = 0             # local kind
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+    query_scale: float = 0.0          # 0 -> head_dim**-0.5
+    causal: bool = True
+    tie_embeddings: bool = True
+    embed_scale: bool = False         # multiply embeddings by sqrt(d)
+    sinusoidal_pos: bool = False      # whisper-style absolute positions
+
+    # MoE
+    n_experts: int = 0
+    n_experts_active: int = 0
+
+    # recurrent
+    rnn_width: int = 0
+
+    # modality frontend (stub: precomputed embeddings via input_specs)
+    frontend_dim: int = 0
+    n_frontend_tokens: int = 0
+    n_encoder_layers: int = 0         # whisper encoder stack
+
+    # ITA integration
+    parallelism: str = "tp_fsdp"      # tp_fsdp | fsdp (pure DP/ZeRO-3)
+    param_dtype: str = "float32"      # bfloat16 -> f32 master in opt state
+    attention_impl: str = "float"     # float|ita|ibert
+    softmax_impl: str = "ita_adaptive"  # ita_paper|ita_adaptive
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"        # full | dots (save matmul outputs)
+    ce_chunks: int = 1                # chunk the CE loss over sequence
+    attn_q_chunk: int = 512           # streaming attention block sizes
+    attn_kv_chunk: int = 512
+    scan_unroll: bool = False         # unroll layer scans (dry-run costs)
+
+    # distribution / long-context capability flags
+    subquadratic: bool = False        # eligible for long_500k
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(pat) * n for pat, n in self.layer_groups)
+
+    def compute_dtype(self):
+        import jax.numpy as jnp
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # train|prefill|decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# Smoke-test shape (reduced, CPU-friendly)
+SMOKE_SHAPE = ShapeConfig("smoke", 64, 2, "train")

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots ITA optimizes in silicon:
+# the quantized attention pipeline (Q.K^T -> integer streaming softmax ->
+# A.V) and the weight-stationary int8 linear layers. Validated against the
+# pure-jnp oracles in each subpackage's ref.py (interpret=True on CPU).
+from repro.kernels.int8_matmul.ops import int8_matmul  # noqa: F401
+from repro.kernels.ita_softmax.ops import ita_softmax  # noqa: F401
+from repro.kernels.ita_attention.ops import ita_attention  # noqa: F401

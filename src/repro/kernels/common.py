@@ -1,0 +1,76 @@
+"""Shared helpers for the ITA Pallas kernels (mask/index math, DA update)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import SOFTMAX_SHIFT
+
+NEG_SENTINEL = -256          # below any int8 value; int32-overflow safe
+MASK_K = 31                  # shift that zeroes a masked element's term
+
+
+def tile_mask(q_tile: jax.Array, kv_tile: jax.Array, bq: int, bkv: int,
+              causal: bool, window: int, kv_len: jax.Array | None,
+              q_offset: jax.Array | int = 0):
+    """Validity mask (bq, bkv) for a (q_tile, kv_tile) grid cell, computed
+    from indices so the EN pass never relies on sentinel logit values.
+
+    ``window > 0`` selects sliding-window attention (Mixtral/Gemma-local):
+    key j is visible from query i iff ``i - window < j <= i``.
+    ``q_offset`` shifts the queries' logical positions (decode: the new
+    token lives at position ``kv_len - 1``, not 0).
+    """
+    qi = q_offset + q_tile * bq \
+        + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kj = kv_tile * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    valid = jnp.ones((bq, bkv), jnp.bool_)
+    if causal or window > 0:
+        valid &= qi >= kj
+    if window > 0:
+        valid &= (qi - kj) < window
+    if kv_len is not None:
+        valid &= kj < kv_len
+    return valid
+
+
+def da_update(m_ref, sigma_ref, logits_i32: jax.Array, valid: jax.Array):
+    """One streaming DA step over a (bq, bkv) logits tile.
+
+    Updates the per-row running max and running denominator stored in the
+    (bq, 1) scratch refs and returns ``(u8 numerator tile, delta_shift)``
+    where ``u = 128 >> k`` (int32, fits int8 for the MXU) and
+    ``delta_shift`` is the correction shift the caller must apply to any
+    value accumulated under the previous max (paper's multi-part update).
+    """
+    x = jnp.where(valid, logits_i32, NEG_SENTINEL)
+    part_max = jnp.max(x, axis=1, keepdims=True)
+    new_max = jnp.maximum(m_ref[...], part_max)
+    delta = jnp.minimum(
+        jax.lax.shift_right_logical(new_max - m_ref[...], SOFTMAX_SHIFT), 31)
+    k = jax.lax.shift_right_logical(new_max - logits_i32, SOFTMAX_SHIFT)
+    k = jnp.where(valid, jnp.minimum(k, 31), MASK_K)
+    u = jax.lax.shift_right_logical(jnp.int32(128), k)       # 128 >> k
+    # sigma accumulates the paper's 2^(8-k) = 2*u terms.
+    sigma_ref[...] = jax.lax.shift_right_logical(sigma_ref[...], delta) \
+        + 2 * jnp.sum(u, axis=1, keepdims=True)
+    m_ref[...] = new_max
+    return u, delta
+
+
+def adaptive_inverse(sigma: jax.Array):
+    """DI with per-row power-of-two scaling: returns (sigma_inv, e_r) with
+    ``sigma_inv ~= 2^(e_r+8)/sigma`` in (128, 256] and ``e_r = floor(log2
+    sigma)``. With e_r pinned to 8 this reduces to the paper's 2^16/sigma."""
+    sigma = jnp.maximum(sigma, 1)
+    e_r = 31 - jax.lax.clz(sigma)
+    pre = jnp.maximum(e_r + 8 - 30, 0)
+    sigma_inv = (jnp.int32(1) << jnp.minimum(e_r + 8 - pre, 30)) \
+        // jax.lax.shift_right_logical(sigma, pre)
+    return sigma_inv, e_r
+
+
+def paper_inverse(sigma: jax.Array):
+    """DI exactly as in silicon: sigma_inv = 2^16 // sigma (16-bit)."""
+    return (jnp.int32(1) << 16) // jnp.maximum(sigma, 1)

@@ -1,0 +1,1 @@
+from repro.kernels.int8_matmul.ops import *  # noqa: F401,F403

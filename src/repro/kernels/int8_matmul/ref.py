@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the int8 weight-stationary matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import INT8_MAX, INT8_MIN
+
+
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array, bias: jax.Array,
+                    mult: jax.Array) -> jax.Array:
+    """x (M,K) int8 @ w (K,N) int8 + bias (N,) int32, requantized by the
+    per-channel f32 multipliers ``mult`` (N,) -> int8."""
+    acc = jax.lax.dot_general(x_q, w_q, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    acc = acc + bias.astype(jnp.int32)[None, :]
+    y = jnp.round(acc.astype(jnp.float32) * mult.astype(jnp.float32)[None, :])
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)

@@ -1,0 +1,251 @@
+"""Fused ITA attention Pallas kernels: Q·Kᵀ → streaming integer softmax → A·V.
+
+Two dataflows, both with the ITA integer softmax:
+
+- ``onepass`` (beyond-paper, flash-style): the int8 attention tile never
+  leaves VMEM. Per (q-tile, kv-tile): int8 Q·Kᵀ on the MXU → requant to the
+  ITA logit grid → DA update of the per-row (max, Σ) stats → the *unnormal-
+  ized* numerators ``u = 128 >> k`` (int8!) multiply V on the MXU and add
+  into a running accumulator which is shift-corrected when the row max
+  grows (the same correction silicon applies to Σ). DI happens once per row
+  at the final kv tile and folds into the output requant as a per-row
+  multiplier. HBM traffic for the S×S matrix: zero.
+
+- ``twopass`` (paper-faithful): pass 1 streams Q·Kᵀ tiles, writes the int8
+  attention matrix A to HBM exactly once and accumulates the (max, Σ) row
+  stats on the fly (DA); DI inverts Σ per row; pass 2 re-streams A, norma-
+  lizes each element with a pure shift (EN, ``p = Σ_inv >> k``) and feeds
+  the MXU for A·V. This reproduces ITA's memory traffic: A written once,
+  read once, softmax adds **no** extra passes.
+
+Integer semantics notes:
+- ``Σ p ≤ 2^(e_r)``... for paper mode (e_r = 8): ``Σ p ≤ 256`` so the A·V
+  accumulator is bounded by 2^15 — f32 scratch holds it exactly (ints are
+  exact in f32 below 2^24), so paper mode remains bit-exact integer.
+- onepass uses ``u = 128 >> k`` so the numerator operand fits int8 for the
+  MXU; the missing factor 2 folds into the output requant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import INT8_MAX, INT8_MIN, SOFTMAX_SHIFT
+from repro.kernels.common import (MASK_K, NEG_SENTINEL, adaptive_inverse,
+                                  da_update, paper_inverse, tile_mask)
+
+
+def _qk_logits(q_tile, k_tile, mult):
+    """int8 Q (bq,d) x int8 K (bkv,d)^T -> int32 -> requant to int8 logit
+    grid (returned widened to int32)."""
+    acc = jax.lax.dot_general(q_tile, k_tile, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    y = jnp.round(acc.astype(jnp.float32) * mult)
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int32)
+
+
+def onepass_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
+                   o_ref, m_ref, sigma_ref, acc_ref,
+                   *, causal: bool, window: int, adaptive: bool,
+                   bq: int, bkv: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+    last_j = pl.num_programs(2) - 1
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_SENTINEL)
+        sigma_ref[...] = jnp.zeros_like(sigma_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    logits = _qk_logits(q_ref[0], k_ref[0], lmult_ref[0, 0])
+    valid = tile_mask(i, j, bq, bkv, causal, window, meta_ref[0, 0],
+                      meta_ref[0, 1])
+    u, delta = da_update(m_ref, sigma_ref, logits, valid)
+    # Correct the running A·V accumulator for the max update (exact in f32:
+    # multiplying by 2^-delta loses nothing, unlike the integer Σ shift).
+    corr = jnp.exp2(-delta.astype(jnp.float32))
+    # u in [0, 128] — packs into uint8 on the MXU (int32 here: interpret
+    # mode validates semantics; XLA emits the s8/u8 MXU path on TPU).
+    pv = jax.lax.dot_general(u, v_ref[0].astype(jnp.int32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    acc_ref[...] = acc_ref[...] * corr + pv.astype(jnp.float32)
+
+    @pl.when(j == last_j)
+    def _finalize():
+        if adaptive:
+            inv, e_r = adaptive_inverse(sigma_ref[...])
+        else:
+            inv = paper_inverse(sigma_ref[...])
+            e_r = jnp.full_like(inv, 8)
+        # out = acc * 2 * inv * 2^-(e_r+8) * (s_v/s_out); the 2 restores the
+        # halved numerator unit (u = 128>>k vs the paper's 256>>k).
+        scale = 2.0 * inv.astype(jnp.float32) * jnp.exp2(
+            -(e_r + 8).astype(jnp.float32)) * omult_ref[0, 0]
+        y = jnp.round(acc_ref[...] * scale)
+        o_ref[0] = jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def qk_da_kernel(q_ref, k_ref, lmult_ref, meta_ref, a_ref, max_o_ref,
+                 sigma_o_ref, m_ref, sigma_ref,
+                 *, causal: bool, window: int, bq: int, bkv: int):
+    """Two-pass, pass 1: logits to HBM once + DA stats."""
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_SENTINEL)
+        sigma_ref[...] = jnp.zeros_like(sigma_ref)
+
+    logits = _qk_logits(q_ref[0], k_ref[0], lmult_ref[0, 0])
+    valid = tile_mask(i, j, bq, bkv, causal, window, meta_ref[0, 0],
+                      meta_ref[0, 1])
+    da_update(m_ref, sigma_ref, logits, valid)
+    a_ref[0] = logits.astype(jnp.int8)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _emit_stats():
+        max_o_ref[0] = m_ref[...][:, 0]
+        sigma_o_ref[0] = sigma_ref[...][:, 0]
+
+
+def av_en_kernel(a_ref, inv_ref, er_ref, max_ref, v_ref, omult_ref,
+                 meta_ref, o_ref, acc_ref,
+                 *, causal: bool, window: int, bq: int, bkv: int):
+    """Two-pass, pass 2: re-stream A, EN by pure shifts, A·V on the MXU."""
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0].astype(jnp.int32)
+    row_max = max_ref[0][:, None]
+    valid = tile_mask(i, j, bq, bkv, causal, window, meta_ref[0, 0],
+                      meta_ref[0, 1])
+    k = jax.lax.shift_right_logical(row_max - a, SOFTMAX_SHIFT)
+    k = jnp.where(valid, jnp.minimum(k, 31), MASK_K)
+    p = jax.lax.shift_right_logical(inv_ref[0][:, None], k)   # EN: p ≤ 256
+    pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.int32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    acc_ref[...] += pv.astype(jnp.float32)       # exact: |acc| < 2^24
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _finalize():
+        e_r = er_ref[0][:, None].astype(jnp.float32)
+        y = jnp.round(acc_ref[...] * jnp.exp2(-e_r) * omult_ref[0, 0])
+        o_ref[0] = jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def _specs_bh(block, index):
+    return pl.BlockSpec(block, index)
+
+
+def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
+                          q_offset=0, causal: bool, window: int = 0,
+                          adaptive: bool = True, block_q: int = 128,
+                          block_kv: int = 128, interpret: bool = True):
+    """q (BH, Sq, D) int8; k/v (BH, Skv, D) int8; returns (BH, Sq, D) int8."""
+    bh, sq, d = q_q.shape
+    skv = k_q.shape[1]
+    bq, bkv = min(block_q, sq), min(block_kv, skv)
+    assert sq % bq == 0 and skv % bkv == 0
+    kern = functools.partial(onepass_kernel, causal=causal, window=window,
+                             adaptive=adaptive, bq=bq, bkv=bkv)
+    lmult = jnp.asarray(logit_mult, jnp.float32).reshape(1, 1)
+    omult = jnp.asarray(out_mult, jnp.float32).reshape(1, 1)
+    meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
+                      jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, sq // bq, skv // bkv),
+        in_specs=[
+            _specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
+        ],
+        out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.int32),
+                        pltpu.VMEM((bq, 1), jnp.int32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q_q, k_q, v_q, lmult, omult, meta)
+
+
+def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
+                          q_offset=0, causal: bool, window: int = 0,
+                          adaptive: bool = False, block_q: int = 128,
+                          block_kv: int = 128, interpret: bool = True):
+    """Paper-faithful dataflow. Returns (out int8, a_mat int8) — A is the
+    materialized int8 attention matrix (written once, read once)."""
+    bh, sq, d = q_q.shape
+    skv = k_q.shape[1]
+    bq, bkv = min(block_q, sq), min(block_kv, skv)
+    assert sq % bq == 0 and skv % bkv == 0
+    lmult = jnp.asarray(logit_mult, jnp.float32).reshape(1, 1)
+    omult = jnp.asarray(out_mult, jnp.float32).reshape(1, 1)
+    meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
+                      jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
+
+    k1 = functools.partial(qk_da_kernel, causal=causal, window=window,
+                           bq=bq, bkv=bkv)
+    a_mat, row_max, sigma = pl.pallas_call(
+        k1,
+        grid=(bh, sq // bq, skv // bkv),
+        in_specs=[
+            _specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
+        ],
+        out_specs=[
+            _specs_bh((1, bq, bkv), lambda b, i, j: (b, i, j)),
+            _specs_bh((1, bq), lambda b, i, j: (b, i)),
+            _specs_bh((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bh, sq, skv), jnp.int8),
+                   jax.ShapeDtypeStruct((bh, sq), jnp.int32),
+                   jax.ShapeDtypeStruct((bh, sq), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.int32),
+                        pltpu.VMEM((bq, 1), jnp.int32)],
+        interpret=interpret,
+    )(q_q, k_q, lmult, meta)
+
+    # DI — one integer inversion per row (two serial dividers in silicon,
+    # a vectorized integer divide here), overlapped by XLA with pass 2 setup.
+    if adaptive:
+        sigma_inv, e_r = adaptive_inverse(sigma)
+    else:
+        sigma_inv = paper_inverse(sigma)
+        e_r = jnp.full_like(sigma_inv, 8)
+
+    k2 = functools.partial(av_en_kernel, causal=causal, window=window,
+                           bq=bq, bkv=bkv)
+    out = pl.pallas_call(
+        k2,
+        grid=(bh, sq // bq, skv // bkv),
+        in_specs=[
+            _specs_bh((1, bq, bkv), lambda b, i, j: (b, i, j)),
+            _specs_bh((1, bq), lambda b, i, j: (b, i)),
+            _specs_bh((1, bq), lambda b, i, j: (b, i)),
+            _specs_bh((1, bq), lambda b, i, j: (b, i)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
+        ],
+        out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(a_mat, sigma_inv, e_r, row_max, v_q, omult, meta)
+    return out, a_mat

@@ -1,0 +1,81 @@
+"""Jitted public wrapper for the fused ITA attention kernels.
+
+Handles (batch, heads, seq, dim) layouts, GQA head-group broadcast, padding
+to block multiples and the quantization-scale plumbing:
+
+    logit_mult = s_q * s_k / (sqrt(d) * EPS_MAX)   (requant onto ITA's grid)
+    out_mult   = s_v / s_out
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import EPS_MAX
+from repro.kernels.ita_attention.kernel import (ita_attention_onepass,
+                                                ita_attention_twopass)
+
+
+def _pad_seq(x, mult):
+    pad = (-x.shape[1]) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "mode", "adaptive", "block_q", "block_kv",
+    "interpret"))
+def ita_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
+                  s_q: jax.Array | float, s_k: jax.Array | float,
+                  s_v: jax.Array | float, s_out: jax.Array | float, *,
+                  q_offset: jax.Array | int = 0, kv_len: jax.Array | int | None = None,
+                  causal: bool = True, window: int = 0, mode: str = "onepass",
+                  adaptive: bool = True, block_q: int = 128,
+                  block_kv: int = 128, interpret: bool = True) -> jax.Array:
+    """Quantized multi-head attention with the ITA integer softmax.
+
+    ``q_q``: (B, Hq, Sq, D) int8; ``k_q``/``v_q``: (B, Hkv, Skv, D) int8.
+    GQA: Hkv must divide Hq; KV heads are broadcast per group.
+    ``q_offset``: logical position of query 0 (decode: valid_kv - Sq).
+    ``kv_len``: valid prefix of the KV cache (defaults to Skv).
+    Returns (B, Hq, Sq, D) int8 at scale ``s_out``.
+    """
+    b, hq, sq, d = q_q.shape
+    hkv, skv = k_q.shape[1], k_q.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    if hkv != hq:
+        rep = hq // hkv
+        k_q = jnp.repeat(k_q, rep, axis=1)
+        v_q = jnp.repeat(v_q, rep, axis=1)
+
+    qf = q_q.reshape(b * hq, sq, d)
+    kf = k_q.reshape(b * hq, skv, d)
+    vf = v_q.reshape(b * hq, skv, d)
+
+    bq = min(block_q, max(8, sq))
+    bkv = min(block_kv, max(128, skv)) if skv >= 128 else skv
+    qf = _pad_seq(qf, bq)
+    kf = _pad_seq(kf, bkv)
+    vf = _pad_seq(vf, bkv)
+
+    lmult = jnp.asarray(s_q, jnp.float32) * jnp.asarray(s_k, jnp.float32) \
+        / (np.sqrt(d) * EPS_MAX)
+    omult = jnp.asarray(s_v, jnp.float32) / jnp.asarray(s_out, jnp.float32)
+
+    kv_len = skv if kv_len is None else kv_len
+    if mode == "onepass":
+        out = ita_attention_onepass(
+            qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
+            causal=causal, window=window, adaptive=adaptive, block_q=bq,
+            block_kv=bkv, interpret=interpret)
+    else:
+        out, _ = ita_attention_twopass(
+            qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
+            causal=causal, window=window, adaptive=adaptive, block_q=bq,
+            block_kv=bkv, interpret=interpret)
+    return out[:, :sq].reshape(b, hq, sq, d)

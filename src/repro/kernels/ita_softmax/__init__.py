@@ -1,0 +1,1 @@
+from repro.kernels.ita_softmax.ops import *  # noqa: F401,F403

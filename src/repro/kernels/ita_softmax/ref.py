@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the standalone ITA softmax kernel.
+
+``ita_softmax_streaming`` in :mod:`repro.core.softmax` already implements
+the part-wise DA semantics; the kernel must match it *exactly* (integer
+equality of the underlying p values) when given the same part size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import softmax as S
+
+
+def ita_softmax_ref(x_q: jax.Array, mask: jax.Array, num_parts: int,
+                    adaptive: bool = False) -> jax.Array:
+    m = mask != 0
+    if adaptive:
+        # streaming DA first, then adaptive DI/EN on the streamed stats
+        *lead, n = x_q.shape
+        part = n // num_parts
+        run_max = jnp.full((*lead, 1), -256, jnp.int32)
+        run_sigma = jnp.zeros((*lead, 1), jnp.int32)
+        for i in range(num_parts):
+            sl = slice(i * part, (i + 1) * part)
+            run_max, run_sigma = S.ita_da_update(
+                run_max, run_sigma, x_q[..., sl], m[..., sl])
+        sigma = jnp.maximum(run_sigma, 1)
+        e_r = 31 - jax.lax.clz(sigma)
+        pre = jnp.maximum(e_r + 8 - 30, 0)
+        sigma_inv = (jnp.int32(1) << jnp.minimum(e_r + 8 - pre, 30)) \
+            // jax.lax.shift_right_logical(sigma, pre)
+        k = jnp.where(m, jnp.minimum(jax.lax.shift_right_logical(
+            run_max - x_q.astype(jnp.int32), 5), 31), 31)
+        p = jax.lax.shift_right_logical(sigma_inv, k)
+        return p.astype(jnp.float32) * jnp.exp2(-e_r.astype(jnp.float32))
+    return S.ita_softmax_streaming(x_q, num_parts, mask=m)

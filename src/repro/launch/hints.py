@@ -1,0 +1,125 @@
+"""Logical sharding hints for model code.
+
+Model code never hard-codes mesh axes; it requests constraints through
+logical roles (``batch``, ``seq``, ``heads``, ``kv_heads``, ``ff``).
+The launcher installs the concrete mesh here (``use_hints``); without a
+mesh every hint is a no-op, so smoke tests and single-device runs are
+untouched. Divisibility is checked per call — a 28-head model on a
+16-way model axis silently skips the heads hint and relies on the seq
+hint instead (sequence-parallel attention).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_hints(mesh, parallelism: str = "tp_fsdp"):
+    prev = (getattr(_STATE, "mesh", None), getattr(_STATE, "mode", "tp_fsdp"))
+    _STATE.mesh = mesh
+    _STATE.mode = parallelism
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.mode = prev
+
+
+def _mode():
+    return getattr(_STATE, "mode", "tp_fsdp")
+
+
+def _batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _token_axes(mesh):
+    """All axes token-level work parallelizes over (fsdp: + model)."""
+    base = _batch_axes(mesh)
+    return base + ("model",) if _mode() == "fsdp" else base
+
+
+def _size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+_ROLES = {
+    "batch": lambda m: _batch_axes(m),
+    "seq": lambda m: "model",
+    "heads": lambda m: "model",
+    "kv_heads": lambda m: "model",
+    "ff": lambda m: "model",
+    "vocab": lambda m: "model",
+    "experts": lambda m: "model",
+}
+
+
+def constrain(x, *roles):
+    """constrain(x, 'batch', None, 'heads', None) — roles per dim; any role
+    that does not divide its dim is dropped."""
+    mesh = _mesh()
+    if mesh is None or x is None:
+        return x
+    if _mode() == "fsdp":
+        # pure-DP: batch over every axis when divisible; otherwise batch
+        # over (pod,data) with *sequence* over model (seq-DP fallback for
+        # global batches smaller than the chip count, e.g. multi-pod).
+        roles = tuple(r if r in ("batch", "seq") else None for r in roles)
+        spec = []
+        used_model = False
+        for dim, role in zip(x.shape, roles):
+            if role == "batch":
+                allax = _token_axes(mesh)
+                if dim % _size(mesh, allax) == 0:
+                    spec.append(allax)
+                    used_model = True
+                elif dim % _size(mesh, _batch_axes(mesh)) == 0:
+                    spec.append(_batch_axes(mesh))
+                else:
+                    spec.append(None)
+            elif role == "seq" and not used_model                     and dim % _size(mesh, "model") == 0:
+                spec.append("model")
+                used_model = True
+            else:
+                spec.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        if role is None:
+            spec.append(None)
+            continue
+        axes = _ROLES[role](mesh)
+        spec.append(axes if dim % _size(mesh, axes) == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def heads_shardable(n_heads: int) -> bool:
+    mesh = _mesh()
+    if mesh is None or _mode() == "fsdp":
+        return mesh is not None and _mode() == "fsdp"  # skip seq-sharding too
+    return n_heads % _size(mesh, "model") == 0
+
+
+def num_data_shards() -> int:
+    """Group count for MoE dispatch (1 when no mesh installed)."""
+    mesh = _mesh()
+    if mesh is None:
+        return 1
+    return _size(mesh, _token_axes(mesh))

@@ -1,0 +1,180 @@
+"""Sharding rules: Megatron-style tensor parallelism over ``model`` ×
+ZeRO-3 parameter/optimizer sharding over ``data`` (and ``pod``) × data
+parallelism for the batch — plus MoE expert parallelism and KV-cache
+sharding (sequence-sharded when the batch axis can't be split, e.g. the
+long_500k single-sequence decode).
+
+Every rule validates divisibility and falls back to replication per axis,
+so the same rules drive smoke configs (tiny dims) and the 90B production
+configs.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+# column-parallel (in, out) -> (fsdp, model); row-parallel -> (model, fsdp)
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_gate_branch", "w_r",
+        "w_k", "w_v", "w_g", "ddlerp_a", "w_lora_a", "router", "unembed",
+        "frontend_proj"}
+_ROW = {"wo", "w_down", "w_out", "w_o", "w_lora_b"}
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(spec, shape, mesh):
+    """Drop axes that don't divide the corresponding dim."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0
+                   else None)
+    return tuple(out)
+
+
+def _leaf_param_spec(path, leaf, mesh, parallelism="tp_fsdp"):
+    names = [p.key for p in path if isinstance(p, DictKey)]
+    name = names[-1] if names else ""
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if parallelism == "fsdp":
+        fsdp = fsdp + ("model",)
+    scanned = "groups" in names
+    shape = leaf.shape[1:] if scanned else leaf.shape
+    nd = len(shape)
+
+    if nd == 0:
+        base = ()
+    elif name == "table":
+        base = ("model", fsdp)
+    elif nd == 3 and name in ("w_gate", "w_up", "w_down") \
+            and parallelism == "fsdp":                 # experts, pure ZeRO-3
+        base = (None, fsdp, None)
+    elif nd == 3 and name in ("w_gate", "w_up"):       # MoE experts (E,d,f)
+        e = shape[0]
+        base = (("model", fsdp, None) if e % _axis_size(mesh, "model") == 0
+                else (None, fsdp, "model"))
+    elif nd == 3 and name == "w_down":                 # MoE experts (E,f,d)
+        e = shape[0]
+        base = (("model", None, fsdp) if e % _axis_size(mesh, "model") == 0
+                else (None, "model", fsdp))
+    elif nd == 3:                                      # blockdiag/LoRA stacks
+        base = (None, None, "model")
+    elif name in _COL and nd == 2:
+        base = (fsdp, "model")
+    elif name in _ROW and nd == 2:
+        base = ("model", fsdp)
+    elif name == "conv_w" or name == "mu":
+        base = (None, "model")
+    elif nd == 1:
+        base = ("model",)
+    else:                                              # norms etc.
+        base = tuple(None for _ in shape)
+
+    if parallelism == "fsdp":
+        # pure ZeRO-3: replace TP dims with storage-only sharding
+        base = tuple(fsdp if ax == "model" else ax for ax in base)
+        # avoid double use of an axis in one spec
+        seen = set()
+        clean = []
+        for ax in base:
+            axs = (ax,) if isinstance(ax, str) else (ax or ())
+            if any(a in seen for a in axs):
+                clean.append(None)
+            else:
+                seen.update(axs)
+                clean.append(ax)
+        base = tuple(clean)
+    base = _fit(base, shape, mesh)
+    return P(*(((None,) + base) if scanned else base))
+
+
+def param_shardings(params_shape, mesh, parallelism="tp_fsdp"):
+    """pytree of NamedShardings matching a params (shape-)pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _leaf_param_spec(path, leaf, mesh, parallelism)),
+        params_shape)
+
+
+def opt_state_shardings(params_shape, mesh, parallelism="tp_fsdp",
+                        has_master=False):
+    from repro.optim.optimizer import OptState
+    ps = param_shardings(params_shape, mesh, parallelism)
+    return OptState(mu=ps, nu=ps, master=ps if has_master else None,
+                    count=NamedSharding(mesh, P()))
+
+
+def _dp_axes(mesh, parallelism):
+    bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return bax + ("model",) if parallelism == "fsdp" else bax
+
+
+def batch_shardings(batch_shape, mesh, parallelism="tp_fsdp"):
+    bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def spec(path, leaf):
+        if parallelism == "fsdp":
+            allax = bax + ("model",)
+            if leaf.shape[0] % _axis_size(mesh, allax) == 0:
+                s = (allax,) + (None,) * (leaf.ndim - 1)
+            elif leaf.ndim >= 2:     # seq-DP fallback (small global batch)
+                s = (bax, "model") + (None,) * (leaf.ndim - 2)
+            else:
+                s = (bax,) + (None,) * (leaf.ndim - 1)
+        else:
+            s = (bax,) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*_fit(s, leaf.shape, mesh)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def _leaf_cache_spec(path, leaf, batch, mesh):
+    """Cache leaves carry a leading scan-period axis; dispatch by name."""
+    names = [p.key for p in path if isinstance(p, DictKey)]
+    name = names[-1] if names else ""
+    bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    shape = leaf.shape
+    nd = len(shape)
+    if nd <= 1 or name == "pos":
+        return P()
+    b_ok = nd >= 2 and shape[1] == batch \
+        and batch % _axis_size(mesh, bax) == 0
+    b_ax = bax if b_ok else None
+    m = _axis_size(mesh, "model")
+    if name in ("k", "v", "k8", "v8"):                 # (P,B,S,G,hd)
+        seq_ax = None if b_ok else "data"              # seq-shard if B small
+        g_ax = "model" if shape[3] % m == 0 else None
+        hd_ax = None if g_ax else ("model" if shape[4] % m == 0 else None)
+        return P(None, b_ax, seq_ax, g_ax, hd_ax)
+    if name == "s":                                    # rwkv (P,B,H,dh,dh)
+        return P(None, b_ax, "model" if shape[2] % m == 0 else None,
+                 None, None)
+    # h / shift / conv: shard the channel (last) dim over model
+    last = "model" if shape[-1] % m == 0 else None
+    return P(None, b_ax, *((None,) * (nd - 3)), last)
+
+
+def cache_shardings(cache_shape, batch, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _leaf_cache_spec(path, leaf, batch, mesh)), cache_shape)
+
+
+def logits_sharding(mesh, batch, vocab, parallelism="tp_fsdp"):
+    bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    b_ax = bax if batch % _axis_size(mesh, bax) == 0 else None
+    v_ax = None if parallelism == "fsdp" else (
+        "model" if vocab % _axis_size(mesh, "model") == 0 else None)
+    return NamedSharding(mesh, P(b_ax, None, v_ax))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,169 @@
+"""Jitted train / prefill / decode steps with production shardings, plus
+``input_specs`` (ShapeDtypeStruct stand-ins — weak-type-correct, shardable,
+no device allocation) used by the dry-run and launchers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as SH
+from repro.models import forward, init_caches, init_model, loss_fn
+from repro.optim.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+# ---------------------------------------------------------------------------
+# Shape stand-ins
+# ---------------------------------------------------------------------------
+
+def params_shape(cfg):
+    return jax.eval_shape(functools.partial(init_model, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_state_shape(cfg):
+    return jax.eval_shape(
+        lambda: init_opt_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         params_shape(cfg))))
+
+
+def caches_shape(cfg, batch, max_len):
+    return jax.eval_shape(
+        functools.partial(init_caches, cfg, batch, max_len))
+
+
+def input_specs(cfg, shape) -> dict[str, Any]:
+    """ShapeDtypeStructs for every model input of an (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s + 1), jnp.int32)}
+        if cfg.frontend_dim:
+            batch["frontend"] = sds(
+                (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32),
+               "caches": caches_shape(cfg, b, s)}
+        if cfg.frontend_dim:
+            out["frontend"] = sds(
+                (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+        return out
+    # decode: one new token against a seq_len KV cache
+    out = {"tokens": sds((b, 1), jnp.int32),
+           "caches": caches_shape(cfg, b, s),
+           "pos0": sds((), jnp.int32)}
+    if cfg.frontend_dim:
+        out["frontend"] = sds(
+            (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt_state, stats = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **stats}
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, tokens, caches, frontend=None):
+        logits, caches, _ = forward(params, tokens, cfg, mode="prefill",
+                                    frontend=frontend, caches=caches)
+        return logits[:, -1:], caches
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, tokens, caches, pos0, frontend=None):
+        logits, caches, _ = forward(params, tokens, cfg, mode="decode",
+                                    frontend=frontend, caches=caches,
+                                    pos0=pos0)
+        return logits, caches
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Jit with shardings
+# ---------------------------------------------------------------------------
+
+def jit_train_step(cfg, mesh, opt_cfg: AdamWConfig):
+    pshape = params_shape(cfg)
+    p_sh = SH.param_shardings(pshape, mesh)
+    o_sh = SH.opt_state_shardings(pshape, mesh)
+    rep = SH.replicated(mesh)
+    dummy_batch = input_specs(cfg, _TrainShape)["batch"]
+    step = make_train_step(cfg, opt_cfg)
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, None),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    ), p_sh, o_sh
+
+
+class _TrainShape:                      # minimal duck-typed shape for jit
+    kind = "train"
+    global_batch = 8
+    seq_len = 128
+
+
+def lower_cell(cfg, shape, mesh, opt_cfg: AdamWConfig | None = None):
+    """Lower (not compile) the step for one (arch × shape × mesh) cell,
+    with all in/out shardings pinned. Returns the jax ``Lowered``."""
+    from repro.launch.hints import use_hints
+    opt_cfg = opt_cfg or AdamWConfig()
+    par = getattr(cfg, "parallelism", "tp_fsdp")
+    pshape = params_shape(cfg)
+    p_sh = SH.param_shardings(pshape, mesh, par)
+    specs = input_specs(cfg, shape)
+    rep = SH.replicated(mesh)
+
+    with mesh, use_hints(mesh, par):
+        if shape.kind == "train":
+            o_sh = SH.opt_state_shardings(
+                pshape, mesh, par,
+                has_master=cfg.param_dtype == "bfloat16")
+            b_sh = SH.batch_shardings(specs["batch"], mesh, par)
+            step = make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            return jitted.lower(pshape, opt_state_shape(cfg), specs["batch"])
+
+        c_sh = SH.cache_shardings(specs["caches"], shape.global_batch, mesh)
+        lg_sh = SH.logits_sharding(mesh, shape.global_batch, cfg.vocab_size,
+                                   par)
+        if shape.kind == "prefill":
+            b_sh = SH.batch_shardings(
+                {"tokens": specs["tokens"]}, mesh, par)["tokens"]
+            f_sh = (SH.batch_shardings({"f": specs["frontend"]}, mesh,
+                                       par)["f"]
+                    if "frontend" in specs else None)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh, f_sh),
+                             out_shardings=(lg_sh, c_sh),
+                             donate_argnums=(2,))
+            return jitted.lower(pshape, specs["tokens"], specs["caches"],
+                                specs.get("frontend"))
+
+        b_sh = SH.batch_shardings({"tokens": specs["tokens"]},
+                                  mesh, par)["tokens"]
+        f_sh = (SH.batch_shardings({"f": specs["frontend"]}, mesh, par)["f"]
+                if "frontend" in specs else None)
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh, rep, f_sh),
+                         out_shardings=(lg_sh, c_sh), donate_argnums=(2,))
+        return jitted.lower(pshape, specs["tokens"], specs["caches"],
+                            specs["pos0"], specs.get("frontend"))

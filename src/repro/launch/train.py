@@ -1,0 +1,91 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+        --steps 50 --batch 8 --seq 128 [--attention-impl ita] \
+        [--ckpt-dir /tmp/ckpt] [--resume]
+
+Full-scale configs use the production mesh (run under a real TPU fleet or
+with XLA_FLAGS=--xla_force_host_platform_device_count=... for rehearsal);
+``--smoke`` runs the reduced config on host devices end to end.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import DataPipeline, SyntheticSource
+from repro.launch import sharding as SH
+from repro.launch.hints import use_hints
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step, params_shape
+from repro.models import init_model
+from repro.optim.optimizer import AdamWConfig, init_opt_state
+from repro.runtime.fault_tolerance import FTConfig, TrainDriver
+
+
+def build(args):
+    cfg = get_config(args.arch, smoke=args.smoke,
+                     **({"attention_impl": args.attention_impl}
+                        if args.attention_impl else {}))
+    mesh = (make_host_mesh() if args.smoke or args.host_mesh
+            else make_production_mesh(multi_pod=args.multi_pod))
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=min(100, args.steps // 10 + 1))
+
+    pshape = params_shape(cfg)
+    p_sh = SH.param_shardings(pshape, mesh)
+    o_sh = SH.opt_state_shardings(pshape, mesh)
+
+    with mesh, use_hints(mesh):
+        init = jax.jit(lambda k: init_model(k, cfg), out_shardings=p_sh)
+        params = init(jax.random.PRNGKey(args.seed))
+        opt_state = jax.jit(init_opt_state, out_shardings=o_sh)(params)
+        step = jax.jit(make_train_step(cfg, opt_cfg),
+                       in_shardings=(p_sh, o_sh, None),
+                       out_shardings=(p_sh, o_sh, None),
+                       donate_argnums=(0, 1))
+
+    pipe = DataPipeline(
+        SyntheticSource(cfg.vocab_size, seed=args.seed),
+        batch=args.batch, seq_len=args.seq, mesh=mesh,
+        frontend_shape=((cfg.n_frontend_tokens, cfg.frontend_dim)
+                        if cfg.frontend_dim else None))
+    return cfg, mesh, params, opt_state, step, pipe, p_sh, o_sh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--host-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attention-impl", default=None,
+                    choices=["float", "ita", "ibert"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg, mesh, params, opt_state, step, pipe, p_sh, o_sh = build(args)
+    ft = FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    driver = TrainDriver(ft, step, params, opt_state, pipe,
+                         param_shardings=p_sh, opt_shardings=o_sh)
+    if args.resume and driver.maybe_restore():
+        print(f"[train] resumed from step {driver.step}")
+    with mesh, use_hints(mesh):
+        metrics = driver.run(args.steps, log_every=args.log_every)
+    print(f"[train] done: loss {float(metrics['loss']):.4f}, "
+          f"stragglers {driver.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

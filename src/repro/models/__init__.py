@@ -1,0 +1,3 @@
+"""Model zoo: build any assigned architecture from its config."""
+from repro.models.transformer import (forward, init_caches, init_model,  # noqa: F401
+                                      loss_fn)

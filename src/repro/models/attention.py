@@ -1,0 +1,291 @@
+"""Multi-head attention with ITA quantized attention as a first-class
+implementation choice.
+
+``attention_impl``:
+- ``float`` — bf16/f32 softmax attention (baseline).
+- ``ita``   — 8-bit quantized pipeline with the ITA integer softmax:
+              * serve (prefill/decode): true integer path — int8 Q·Kᵀ
+                (int32 accum), requant onto the ITA logit grid, shift-only
+                softmax (adaptive per-row scale by default), int A·V; the
+                KV cache is stored int8 (halving cache bytes vs bf16).
+              * train: differentiable QAT forward (STE round/floor) matching
+                the deployed integer semantics — the paper's QAT-trained
+                clipping in action.
+- ``ibert`` — same quantized pipeline with I-BERT's 32-bit polynomial
+              softmax (the paper's accuracy baseline).
+
+GQA is native (no KV broadcast); sliding-window, logit softcap and
+cross-attention (audio/vision memory) are supported — see DESIGN.md
+§Arch-applicability for how each assigned architecture uses these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import softmax as S
+from repro.core.quant import EPS_MAX, INT8_MAX, INT8_MIN
+from repro.launch import hints
+from repro.models.layers import _normal, rope, softcap
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    # cross-attn consumes the frontend memory *after* projection to d_model
+    kv_in = d
+    p = {"wq": _normal(ks[0], (d, h * hd), d ** -0.5),
+         "wk": _normal(ks[1], (kv_in, g * hd), kv_in ** -0.5),
+         "wv": _normal(ks[2], (kv_in, g * hd), kv_in ** -0.5),
+         "wo": _normal(ks[3], (h * hd, d), (h * hd) ** -0.5)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((g * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((g * hd,), jnp.float32)
+    if cfg.attention_impl != "float":
+        # Calibrated quantization scales (QAT-trainable), one per tensor
+        # role — the clipping thresholds the paper learns with QAT.
+        for name in ("s_q", "s_k", "s_v"):
+            p[name] = jnp.asarray(0.05, jnp.float32)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _mask(sq, skv, q_offset, causal, window, kv_len):
+    qi = q_offset + jnp.arange(sq, dtype=jnp.int32)[:, None]
+    kj = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    m = jnp.ones((sq, skv), jnp.bool_)
+    if causal or window > 0:
+        m &= qi >= kj
+    if window > 0:
+        m &= (qi - kj) < window
+    if kv_len is not None:
+        m &= kj < kv_len
+    return m
+
+
+def _gqa_logits(q, k):
+    """q (B,Sq,H,hd), k (B,Skv,G,hd) -> logits (B,G,H/G,Sq,Skv) without
+    materializing broadcast KV heads."""
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    qg = q.reshape(b, sq, g, h // g, hd)
+    return jnp.einsum("bqgmd,bkgd->bgmqk", qg, k)
+
+
+def _gqa_out(p, v):
+    """p (B,G,M,Sq,Skv), v (B,Skv,G,hd) -> (B,Sq,H,hd)."""
+    out = jnp.einsum("bgmqk,bkgd->bqgmd", p, v)
+    b, sq, g, m, hd = out.shape
+    return out.reshape(b, sq, g * m, hd)
+
+
+def _quantize_dyn(x, scale):
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), INT8_MIN, INT8_MAX)
+    return q.astype(jnp.int8)
+
+
+def attention_core(q, k, v, *, cfg, params, causal, window, q_offset=0,
+                   kv_len=None, mode="train", k_quant=None, v_quant=None):
+    """The paper's pipeline: Q·Kᵀ -> softmax -> A·V.
+
+    q: (B,Sq,H,hd) float; k/v: (B,Skv,G,hd) float *or* pre-quantized int8
+    (``k_quant``/``v_quant`` from an int8 KV cache).
+    Returns (B,Sq,H,hd) float.
+
+    Dispatch: decode (Sq small, traced q_offset) takes the *direct* path
+    over the full KV cache; train/prefill take the *streaming chunked*
+    path (repro.models.chunked_attention) so the S×S matrix never
+    materializes — the paper's streaming-softmax dataflow at XLA level.
+    """
+    impl = cfg.attention_impl
+    scale = cfg.query_scale or cfg.head_dim ** -0.5
+    sq_, skv = q.shape[1], (k_quant if k_quant is not None else k).shape[1]
+    chunked = mode != "decode" and sq_ > 1 and impl != "ibert"
+
+    if chunked:
+        from repro.models.chunked_attention import streaming_attention
+        ck = dict(q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+        if impl == "float":
+            out = streaming_attention(q, k, v, impl="float", cfg=cfg,
+                                      scale=scale, causal=causal,
+                                      window=window, kv_len=kv_len, **ck)
+        else:
+            s_q, s_k, s_v = params["s_q"], params["s_k"], params["s_v"]
+            if mode == "train":
+                from repro.core.quant import fake_quant
+                out = streaming_attention(
+                    q, k, fake_quant(v, s_v), impl="ita_ste", cfg=cfg,
+                    scale=scale, s_q=s_q, s_k=s_k, s_v=s_v, causal=causal,
+                    window=window, kv_len=kv_len, **ck)
+            else:
+                q8 = _quantize_dyn(q, s_q)
+                k8 = k_quant if k_quant is not None else _quantize_dyn(k, s_k)
+                v8 = v_quant if v_quant is not None else _quantize_dyn(v, s_v)
+                out = streaming_attention(
+                    q8, k8, v8, impl="ita_int", cfg=cfg, scale=scale,
+                    s_q=s_q, s_k=s_k, s_v=s_v, causal=causal, window=window,
+                    kv_len=kv_len, **ck)
+        return out.astype(q.dtype if q.dtype != jnp.int8 else
+                          cfg.compute_dtype())
+
+    mask = _mask(sq_, skv, q_offset, causal, window, kv_len)[None, None, None]
+
+    if impl == "float" or (mode == "train" and impl == "ibert"):
+        logits = _gqa_logits(q, k) * scale
+        logits = softcap(logits, cfg.attn_softcap)
+        logits = jnp.where(mask, logits, -jnp.inf)
+        p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        p = jnp.where(mask, p, 0.0).astype(v.dtype)
+        return _gqa_out(p, v)
+
+    s_q, s_k, s_v = params["s_q"], params["s_k"], params["s_v"]
+
+    if mode == "train":                      # QAT forward (STE, float ops)
+        from repro.core.quant import fake_quant
+        qf = fake_quant(q, s_q)
+        kf = fake_quant(k, s_k)
+        vf = fake_quant(v, s_v)
+        logits = _gqa_logits(qf, kf) * scale
+        logits = softcap(logits, cfg.attn_softcap)
+        p = S.ita_softmax_ste(logits.astype(jnp.float32),
+                              mask=jnp.broadcast_to(mask, logits.shape))
+        return _gqa_out(p.astype(v.dtype), vf)
+
+    # --- integer serve path (direct: decode / ibert) -------------------
+    q8 = _quantize_dyn(q, s_q)
+    k8 = k_quant if k_quant is not None else _quantize_dyn(k, s_k)
+    v8 = v_quant if v_quant is not None else _quantize_dyn(v, s_v)
+    acc = _gqa_logits(q8.astype(jnp.int32), k8.astype(jnp.int32))   # int32
+    logits_f = acc.astype(jnp.float32) * (s_q * s_k * scale)
+    logits_f = softcap(logits_f, cfg.attn_softcap)
+    lq = jnp.clip(jnp.round(logits_f / EPS_MAX), INT8_MIN, INT8_MAX
+                  ).astype(jnp.int32)
+    bmask = jnp.broadcast_to(mask, lq.shape)
+
+    if impl == "ibert":
+        p = S.ibert_softmax(lq, mask=bmask)                 # f32 probs
+        out = jnp.einsum("bgmqk,bkgd->bqgmd", p, v8.astype(jnp.float32))
+        out = out * s_v
+    else:                                                   # ITA
+        if cfg.softmax_impl == "ita_paper":
+            p_int, sigma, _ = S.ita_softmax_int(lq, mask=bmask)
+            e_r = jnp.full_like(sigma, 8)
+        else:                                               # adaptive (default)
+            p_int, e_r, _ = S.ita_softmax_adaptive_int(lq, mask=bmask)
+        acc_o = jnp.einsum("bgmqk,bkgd->bqgmd", p_int,
+                           v8.astype(jnp.int32))            # Σp·v, int32-safe
+        out = acc_o.astype(jnp.float32) \
+            * jnp.exp2(-e_r.astype(jnp.float32)).transpose(0, 3, 1, 2, 4) \
+            * s_v
+    b, sq2, g, m, hd = out.shape
+    return out.reshape(b, sq2, g * m, hd).astype(cfg.compute_dtype())
+
+
+def apply_attention(params, x, *, cfg, kind="global", positions=None,
+                    mem=None, cache=None, mode="train"):
+    """Full attention layer: projections + RoPE + core + output proj.
+
+    ``kind``: global | local (cfg.local_window) | swa (cfg.window) | cross.
+    ``cache`` (serve): dict with int8 (ita) or compute-dtype K/V ring
+    buffers and the current position; returns (y, new_cache).
+    """
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    cross = kind == "cross"
+    window = {"global": 0, "cross": 0, "local": cfg.local_window,
+              "swa": cfg.window}[kind]
+    causal = not cross and cfg.causal
+
+    q = x @ params["wq"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+    q = _split_heads(q, h, hd)
+
+    kv_src = mem if cross else x
+    if cross and cache is not None and "k8" in cache and mode == "decode":
+        k = v = None                               # static cross KV cached
+    else:
+        k = kv_src @ params["wk"].astype(dt)
+        v = kv_src @ params["wv"].astype(dt)
+        if cfg.qkv_bias:
+            k = k + params["bk"].astype(dt)
+            v = v + params["bv"].astype(dt)
+        k, v = _split_heads(k, g, hd), _split_heads(v, g, hd)
+
+    if positions is not None and not cross and cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        if k is not None:
+            k = rope(k, positions, cfg.rope_theta)
+
+    # TP hints: heads over 'model' when divisible, else sequence-parallel
+    # attention (Sq over 'model'); KV heads likewise (replicated if small).
+    if hints.heads_shardable(h):
+        q = hints.constrain(q, "batch", None, "heads", None)
+    else:
+        q = hints.constrain(q, "batch", "seq", None, None)
+    if k is not None:
+        k = hints.constrain(k, "batch", None, "kv_heads", None)
+        v = hints.constrain(v, "batch", None, "kv_heads", None)
+
+    new_cache = cache
+    quant_cache = cfg.attention_impl != "float"
+
+    def _q(t, s):
+        return _quantize_dyn(t, params[s]) if quant_cache else t
+
+    if cache is None:
+        y = attention_core(q, k, v, cfg=cfg, params=params, causal=causal,
+                           window=window, mode=mode)
+    elif cross:
+        if mode != "decode":                        # (re)compute at prefill
+            cache = dict(cache, k8=_q(k, "s_k"), v8=_q(v, "s_v"))
+        new_cache = cache
+        kw = (dict(k_quant=cache["k8"], v_quant=cache["v8"])
+              if quant_cache else {})
+        y = attention_core(q, None if quant_cache else cache["k8"],
+                           None if quant_cache else cache["v8"], cfg=cfg,
+                           params=params, causal=False, window=0, mode=mode,
+                           **kw)
+    elif mode == "prefill":
+        # Full in-layer attention; then write the canonical ring-buffer
+        # tail (token t lives at slot t % cache_size) so decode can append.
+        y = attention_core(q, k, v, cfg=cfg, params=params, causal=causal,
+                           window=window, mode=mode)
+        s = k.shape[1]
+        cs = cache["k"].shape[1]
+        tail_k, tail_v = _q(k, "s_k"), _q(v, "s_v")
+        if s >= cs:
+            tail_k = jnp.roll(tail_k[:, s - cs:], s % cs, axis=1)
+            tail_v = jnp.roll(tail_v[:, s - cs:], s % cs, axis=1)
+            kc, vc = tail_k, tail_v
+        else:
+            kc = jax.lax.dynamic_update_slice(cache["k"], tail_k, (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], tail_v, (0, 0, 0, 0))
+        new_cache = {"k": kc, "v": vc, "pos": jnp.asarray(s, jnp.int32)}
+    else:                                           # decode append
+        pos = cache["pos"]
+        s_new = q.shape[1]
+        cs = cache["k"].shape[1]
+        slot = pos % cs                              # ring buffer (windowed)
+        kc = jax.lax.dynamic_update_slice(cache["k"], _q(k, "s_k"),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], _q(v, "s_v"),
+                                          (0, slot, 0, 0))
+        new_cache = {"k": kc, "v": vc, "pos": pos + s_new}
+        kv_len = jnp.minimum(pos + s_new, cs)
+        q_offset = jnp.minimum(pos, jnp.maximum(cs - s_new, 0))
+        kw = dict(k_quant=kc, v_quant=vc) if quant_cache else {}
+        y = attention_core(q, None if quant_cache else kc,
+                           None if quant_cache else vc, cfg=cfg,
+                           params=params, causal=causal, window=window,
+                           q_offset=q_offset, kv_len=kv_len, mode=mode, **kw)
+
+    y = y.reshape(*y.shape[:-2], h * hd) @ params["wo"].astype(dt)
+    y = hints.constrain(y, "batch", "seq", None)
+    return y, new_cache

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts layer (OLMoE 64e/top-8, Mixtral 8e/top-2).
+
+GShard-style **grouped** sort-based capacity dispatch: tokens are split
+into G groups (one per data shard under the production mesh), and all
+routing machinery — top-k, the rank-within-expert argsort, the capacity
+scatter — runs *inside* a group (vmapped over G, which GSPMD maps onto the
+data axis, keeping sort/scatter shard-local). Only the expert FFN einsum
+crosses shards: buffers are (G, E, C, d) with G→data and E→model (expert
+parallelism), so the group↔expert exchange lowers to the MoE all-to-alls
+visible in the §Roofline collective term.
+
+Tokens beyond the per-group capacity ``C = cf · t_g·k/E`` are dropped
+(combine weight 0, standard GShard semantics); small groups
+(t_g·k ≤ 4096 — decode steps, smoke tests) use exact capacity so nothing
+drops and serve outputs are batch-size independent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hints
+from repro.models.layers import _normal
+
+
+def init_moe(key, cfg):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {"router": _normal(ks[0], (d, e), d ** -0.5),
+            "w_gate": _normal(ks[1], (e, d, f), d ** -0.5),
+            "w_up": _normal(ks[2], (e, d, f), d ** -0.5),
+            "w_down": _normal(ks[3], (e, f, d), f ** -0.5)}
+
+
+def _dispatch_group(xg, probs, e, k, cap):
+    """Per-group routing. xg (t,d), probs (t,e) -> (buf (e,cap,d),
+    combine info)."""
+    t = xg.shape[0]
+    top_w, top_i = jax.lax.top_k(probs, k)                     # (t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    e_flat = top_i.reshape(-1)
+    w_flat = top_w.reshape(-1)
+    order = jnp.argsort(e_flat)
+    se = e_flat[order]
+    starts = jnp.searchsorted(se, jnp.arange(e, dtype=se.dtype))
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)
+    src_tok = order // k
+    buf = jnp.zeros((e * cap + 1, xg.shape[1]), xg.dtype).at[slot].set(
+        xg[src_tok] * keep[:, None].astype(xg.dtype))
+    return buf[:-1].reshape(e, cap, -1), (slot, src_tok, keep,
+                                          w_flat[order])
+
+
+def _combine_group(y_buf, info, t, dtype):
+    slot, src_tok, keep, w_sorted = info
+    e_cap = y_buf.shape[0] * y_buf.shape[1]
+    y_flat = y_buf.reshape(e_cap, -1)
+    gathered = jnp.where(keep[:, None],
+                         y_flat[jnp.minimum(slot, e_cap - 1)], 0.0)
+    return jnp.zeros((t, y_flat.shape[1]), dtype).at[src_tok].add(
+        gathered * w_sorted[:, None].astype(dtype))
+
+
+def apply_moe(p, x, cfg, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    t = b * s
+    g = hints.num_data_shards()
+    if t % g or (t // g) < 1:
+        g = 1
+    tg = t // g
+
+    xg = x.reshape(g, tg, d)
+    xg = hints.constrain(xg, "batch", None, None)
+    logits = (xg.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if tg * k <= 4096:
+        cap = tg * k          # exact: decode/smoke, no drops
+    else:
+        cap = min(max(int(capacity_factor * tg * k / e), 1), tg * k)
+
+    buf, info = jax.vmap(
+        lambda xx, pp: _dispatch_group(xx, pp, e, k, cap))(xg, probs)
+    # Constraint sandwich: the scatter above must stay group-local (else
+    # XLA emulates a cross-shard scatter with ~GiB all-reduces); the
+    # group-local -> expert-sharded reshard below lowers to the MoE
+    # all-to-all proper.
+    buf = hints.constrain(buf, "batch", None, None, None)       # local
+    buf = hints.constrain(buf, "batch", "experts", None, None)  # a2a (G,E,C,d)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf,
+                               p["w_gate"].astype(x.dtype))) \
+        * jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(x.dtype))
+    y_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    y_buf = hints.constrain(y_buf, "batch", "experts", None, None)
+    y_buf = hints.constrain(y_buf, "batch", None, None, None)   # a2a back
+
+    out = jax.vmap(lambda yb, inf: _combine_group(yb, inf, tg, x.dtype))(
+        y_buf, info)
+    out = hints.constrain(out, "batch", None, None)
+    return out.reshape(b, s, d)
+
+
+def moe_aux_loss(p, x, cfg):
+    """Switch-Transformer load-balance loss: E * Σ_e f_e · p_e."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    xf = x.reshape(-1, d)
+    probs = jax.nn.softmax((xf.astype(jnp.float32) @ p["router"]), axis=-1)
+    _, top_i = jax.lax.top_k(probs, k)
+    frac = jnp.mean(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(0, 1))
+    return e * jnp.sum(frac * probs.mean(0))

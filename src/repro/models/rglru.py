@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The temporal mixer of recurrentgemma's 2-of-3 non-attention layers:
+gate branch (GeLU) ⊙ (causal conv1d(4) → RG-LRU) → output projection.
+
+RG-LRU (per channel, gates block-diagonal per head as in Griffin):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(-c * softplus(Λ) * r_t)     data-dependent decay (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is a first-order elementwise linear scan — evaluated with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly), which is this arch's
+sub-quadratic claim to the ``long_500k`` shape. Decode keeps O(1) state:
+(h, last-3 conv inputs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal
+
+_C = 8.0
+_CONV_K = 4
+
+
+def init_rglru(key, cfg):
+    d, dr, nh = cfg.d_model, cfg.rnn_width, cfg.n_heads
+    dh = dr // nh
+    ks = jax.random.split(key, 7)
+    return {
+        "w_gate_branch": _normal(ks[0], (d, dr), d ** -0.5),
+        "w_in": _normal(ks[1], (d, dr), d ** -0.5),
+        "conv_w": _normal(ks[2], (_CONV_K, dr), 0.1),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": _normal(ks[3], (nh, dh, dh), dh ** -0.5),   # block-diag gates
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": _normal(ks[4], (nh, dh, dh), dh ** -0.5),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lam": _normal(ks[5], (dr,), 1.0) + 4.0,           # Λ init: a ≈ 0.97
+        "w_out": _normal(ks[6], (dr, d), dr ** -0.5),
+    }
+
+
+def _blockdiag(x, w, nh):
+    b, s, dr = x.shape
+    xh = x.reshape(b, s, nh, dr // nh)
+    return jnp.einsum("bshi,hij->bshj", xh, w.astype(x.dtype)
+                      ).reshape(b, s, dr)
+
+
+def _conv1d_causal(x, w, bias, state=None):
+    """Depthwise causal conv, kernel 4. ``state``: (B, K-1, dr) history."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], _CONV_K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(_CONV_K))
+    new_state = xp[:, -(_CONV_K - 1):]
+    return out + bias.astype(x.dtype), new_state
+
+
+def _rglru_scan(x, a, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over time axis 1."""
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x
+    if h0 is not None:
+        # Fold the carried state in as a virtual step 0.
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b_t = jnp.concatenate([h0[:, None].astype(b_t.dtype), b_t], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b_t), axis=1)
+    return h[:, 1:] if h0 is not None else h
+
+
+def apply_rglru(p, x, cfg, state=None):
+    """x: (B, S, d). state (decode): {"h": (B,dr), "conv": (B,3,dr)}.
+    Returns (y, new_state)."""
+    nh = cfg.n_heads
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt), approximate=True)
+    u = x @ p["w_in"].astype(dt)
+    u, conv_state = _conv1d_causal(u, p["conv_w"], p["conv_b"],
+                                   None if state is None else state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(_blockdiag(uf, p["w_a"], nh) + p["b_a"])
+    i = jax.nn.sigmoid(_blockdiag(uf, p["w_x"], nh) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    h = _rglru_scan(i * uf, a, None if state is None else state["h"])
+
+    y = (h.astype(dt) * gate) @ p["w_out"].astype(dt)
+    new_state = {"h": h[:, -1], "conv": conv_state}
+    return y, new_state
+
+
+def init_rglru_state(batch, cfg, dtype=jnp.float32):
+    dr = cfg.rnn_width
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_K - 1, dr), dtype)}

@@ -1,0 +1,136 @@
+"""RWKV6 "Finch" blocks (attention-free SSM with data-dependent decay).
+
+Time-mix: per-head matrix-valued state S ∈ R^{dh×dh} with
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+where the decay w_t is *data-dependent* (the Finch contribution) via a
+low-rank ("ddlerp") projection, as are the token-shift interpolations.
+
+The recurrence runs as a ``lax.scan`` over time (compact HLO for the
+dry-run; a chunkwise-parallel formulation is a §Perf candidate). Decode
+carries O(1) state: (token-shift tail, per-head S).
+
+ITA applicability: RWKV6 has **no softmax attention** — the paper's softmax
+accelerator has no site here (DESIGN.md §Arch-applicability); projections
+can still use the int8 weight-stationary matmul path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal
+
+_LORA = 64        # ddlerp low-rank dim
+_LORA_W = 64      # decay low-rank dim
+
+
+def init_time_mix(key, cfg):
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": _normal(ks[0], (5, d), 0.1),             # r,k,v,w,g shift mixes
+        "ddlerp_a": _normal(ks[1], (d, 5 * _LORA), d ** -0.5),
+        "ddlerp_b": _normal(ks[2], (5, _LORA, d), _LORA ** -0.5),
+        "w_r": _normal(ks[3], (d, d), d ** -0.5),
+        "w_k": _normal(ks[4], (d, d), d ** -0.5),
+        "w_v": _normal(ks[5], (d, d), d ** -0.5),
+        "w_g": _normal(ks[6], (d, d), d ** -0.5),
+        "w_o": _normal(ks[7], (d, d), d ** -0.5),
+        "w0": _normal(ks[8], (d,), 0.5) - 6.0,         # decay bias
+        "w_lora_a": _normal(ks[9], (d, _LORA_W), d ** -0.5),
+        "w_lora_b": _normal(ks[10], (_LORA_W, d), _LORA_W ** -0.5),
+        "u": _normal(ks[11], (d,), 0.5),               # current-token bonus
+        "ln_scale": jnp.ones((nh, dh), jnp.float32),   # per-head groupnorm
+        "ln_bias": jnp.zeros((nh, dh), jnp.float32),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B, d) last token of the previous chunk (zeros at start)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v,w: (B, T, H, dh); u: (H, dh); s0: (B, H, dh, dh).
+    Returns (o (B,T,H,dh), sT)."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B,H,dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,dh,dh)
+        o_t = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, o_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    sT, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1), sT
+
+
+def apply_time_mix(p, x, cfg, state=None):
+    """x: (B,S,d); state: {"shift": (B,d), "s": (B,H,dh,dh)}."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    dt = x.dtype
+    prev = jnp.zeros((b, d), dt) if state is None else state["shift"].astype(dt)
+    xs = _token_shift(x, prev)
+
+    # ddlerp: data-dependent interpolation between x and shifted x.
+    base = xs - x
+    lora = jnp.tanh(x @ p["ddlerp_a"].astype(dt)).reshape(b, s, 5, _LORA)
+    dyn = jnp.einsum("bsfl,fld->bsfd", lora, p["ddlerp_b"].astype(dt))
+    mixed = x[:, :, None] + base[:, :, None] * (p["mu"].astype(dt) + dyn)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = (xr @ p["w_r"].astype(dt)).reshape(b, s, nh, dh)
+    k = (xk @ p["w_k"].astype(dt)).reshape(b, s, nh, dh)
+    v = (xv @ p["w_v"].astype(dt)).reshape(b, s, nh, dh)
+    g = jax.nn.silu(xg @ p["w_g"].astype(dt))
+    ww = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) \
+        @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, s, nh, dh)      # decay in (0,1)
+
+    s0 = jnp.zeros((b, nh, dh, dh), jnp.float32) if state is None \
+        else state["s"]
+    o, sT = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32), w, p["u"].reshape(nh, dh), s0)
+
+    # per-head group norm
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 1e-5) * p["ln_scale"] + p["ln_bias"]
+    y = (o.reshape(b, s, d).astype(dt) * g) @ p["w_o"].astype(dt)
+    return y, {"shift": x[:, -1].astype(jnp.float32), "s": sT}
+
+
+def init_channel_mix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {"mu_k": _normal(ks[0], (d,), 0.1),
+            "mu_r": _normal(ks[1], (d,), 0.1),
+            "w_k": _normal(ks[2], (d, f), d ** -0.5),
+            "w_v": _normal(ks[3], (f, d), f ** -0.5),
+            "w_r": _normal(jax.random.fold_in(key, 9), (d, d), d ** -0.5)}
+
+
+def apply_channel_mix(p, x, cfg, state=None):
+    b, s, d = x.shape
+    dt = x.dtype
+    prev = jnp.zeros((b, d), dt) if state is None else state["shift"].astype(dt)
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["mu_k"].astype(dt)
+    xr = x + (xs - x) * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(dt)))
+    y = jax.nn.sigmoid(xr @ p["w_r"].astype(dt)) * (k @ p["w_v"].astype(dt))
+    return y, {"shift": x[:, -1].astype(jnp.float32)}
+
+
+def init_rwkv_state(batch, cfg):
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    return {"tm": {"shift": jnp.zeros((batch, d), jnp.float32),
+                   "s": jnp.zeros((batch, nh, dh, dh), jnp.float32)},
+            "cm": {"shift": jnp.zeros((batch, d), jnp.float32)}}

@@ -1,0 +1,101 @@
+"""AdamW + schedules + global-norm clipping (pure JAX, optimizer state is
+a pytree mirroring params — sharded identically, ZeRO-3 style, by the
+launcher's sharding rules)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: object
+    nu: object
+    master: object          # f32 master weights when params are bf16
+    count: jax.Array
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    needs_master = any(p.dtype == jnp.bfloat16
+                       for p in jax.tree.leaves(params))
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if needs_master else None)
+    return OptState(mu=zeros,
+                    nu=jax.tree.map(jnp.zeros_like, zeros),
+                    master=master,
+                    count=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, opt_state: OptState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, stats)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = opt_state.count + 1
+    lr = lr_schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v, w32):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        base = w32 if w32 is not None else p.astype(jnp.float32)
+        step = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                     + cfg.weight_decay * base)
+        new32 = base - step
+        return new32.astype(p.dtype), m, v, new32
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state.mu)
+    flat_v = jax.tree.leaves(opt_state.nu)
+    flat_w = (jax.tree.leaves(opt_state.master)
+              if opt_state.master is not None else [None] * len(flat_p))
+    out = [upd(p, g, m, v, w) for p, g, m, v, w in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_w = (jax.tree.unflatten(treedef, [o[3] for o in out])
+             if opt_state.master is not None else None)
+    return new_p, OptState(new_m, new_v, new_w, count), \
+        {"grad_norm": gnorm, "lr": lr}

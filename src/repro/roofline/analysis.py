@@ -1,0 +1,245 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per-device program)
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / link_bw
+
+``cost_analysis()`` supplies FLOPs and bytes for the per-device SPMD
+program; collective bytes are parsed from the compiled HLO text (operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 (394 int8) per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+HW = {
+    "peak_bf16": 197e12,
+    "peak_int8": 394e12,
+    "hbm_bw": 819e9,
+    "link_bw": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?[a-z0-9_\[\],\s]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from (compiled) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        kind = m.group(1)
+        rhs = line.split("=", 1)[1]
+        paren = rhs.find("(")
+        operand_str = rhs[paren:]
+        shapes = _SHAPE_RE.findall(operand_str)
+        if not shapes:
+            continue
+        counts[kind] += 1
+        out[kind] += sum(_shape_bytes(d, s) for d, s in shapes)
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    model_flops: float           # analytic useful flops (global)
+    chips: int
+    flops_int8: float = 0.0      # subset of flops on the int8 MXU path
+
+    @property
+    def compute_s(self):
+        return (self.flops - self.flops_int8) / HW["peak_bf16"] \
+            + self.flops_int8 / HW["peak_int8"]
+
+    @property
+    def compute_int8_s(self):
+        return self.flops / HW["peak_int8"]
+
+    @property
+    def memory_s(self):
+        return self.hbm_bytes / HW["hbm_bw"]
+
+    @property
+    def collective_s(self):
+        return self.coll_bytes / HW["link_bw"]
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self):
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self):
+        return dict(flops=self.flops, hbm_bytes=self.hbm_bytes,
+                    coll_bytes=self.coll_bytes,
+                    compute_s=self.compute_s, memory_s=self.memory_s,
+                    collective_s=self.collective_s,
+                    bottleneck=self.bottleneck,
+                    model_flops=self.model_flops,
+                    useful_ratio=self.useful_ratio)
+
+
+def cost_analysis_terms(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    return flops, bytes_acc
+
+
+# ---------------------------------------------------------------------------
+# Analytic "useful" FLOPs (MODEL_FLOPS): 6·N·D dense / 6·N_active·D MoE,
+# plus attention terms (not captured by 6ND).
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg) -> dict:
+    """Analytic parameter counts (matches init_model to ~1%)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    attn = d * h * hd + 2 * d * g * hd + h * hd * d
+    mlp = {"swiglu": 3 * d * f, "geglu": 3 * d * f, "gelu": 2 * d * f,
+           "moe": 0, "rwkv": 0}[cfg.mlp_type]
+    moe = 3 * d * f * cfg.n_experts + d * cfg.n_experts
+    moe_active = 3 * d * f * cfg.n_experts_active + d * cfg.n_experts
+    dr = cfg.rnn_width or d
+    # 2 input branches + out proj + block-diag gates + conv + lambda
+    rglru = 3 * d * dr + 2 * dr * (dr // max(cfg.n_heads, 1)) + 5 * dr
+    rwkv_tm = 5 * d * d + d * (5 * 64) + 5 * 64 * d + 2 * d * 64
+    rwkv_cm = 2 * d * f + d * d
+
+    total = active = 0
+    for pattern, n in cfg.layer_groups:
+        for kind in pattern:
+            if kind in ("attn", "local", "swa", "enc"):
+                blk = attn + (moe if cfg.mlp_type == "moe" else mlp)
+                blk_a = attn + (moe_active if cfg.mlp_type == "moe" else mlp)
+            elif kind == "cross":
+                blk = blk_a = attn + 3 * d * f
+            elif kind == "attn_cross":
+                blk = blk_a = 2 * attn + 2 * d * f
+            elif kind == "rglru":
+                blk = blk_a = rglru + 3 * d * f
+            elif kind == "rwkv":
+                blk = blk_a = rwkv_tm + rwkv_cm
+            total += blk * n
+            active += blk_a * n
+    if cfg.n_encoder_layers:
+        total += cfg.n_encoder_layers * (attn + 2 * d * f)
+        active += cfg.n_encoder_layers * (attn + 2 * d * f)
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    return {"backbone": total, "backbone_active": active, "embedding": emb,
+            "total": total + emb,
+            "total_active": active + emb}
+
+
+def attention_flops(cfg, seq, batch, kind="train", kv_len=None):
+    """QK^T + AV flops across all attention layers (2·2·S·Skv·H·hd each,
+    causal halving for self-attn in train/prefill)."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    total = 0.0
+    for pattern, n in cfg.layer_groups:
+        for k in pattern:
+            if k in ("attn", "enc"):
+                skv = kv_len if kind == "decode" else seq
+                sq = 1 if kind == "decode" else seq
+                causal_f = 0.5 if kind != "decode" else 1.0
+                total += n * 4 * sq * skv * h * hd * causal_f
+            elif k in ("local", "swa"):
+                w = cfg.local_window if k == "local" else cfg.window
+                skv = min(kv_len or seq, w) if kind == "decode" \
+                    else min(seq, w)
+                sq = 1 if kind == "decode" else seq
+                total += n * 4 * sq * skv * h * hd \
+                    * (0.5 if kind != "decode" and seq <= w else 1.0)
+            elif k == "cross":
+                sq = 1 if kind == "decode" else seq
+                total += n * 4 * sq * cfg.n_frontend_tokens * h * hd
+            elif k == "attn_cross":
+                skv = kv_len if kind == "decode" else seq
+                sq = 1 if kind == "decode" else seq
+                causal_f = 0.5 if kind != "decode" else 1.0
+                total += n * (4 * sq * skv * h * hd * causal_f
+                              + 4 * sq * cfg.n_frontend_tokens * h * hd)
+    if cfg.n_encoder_layers and kind != "decode":
+        total += cfg.n_encoder_layers * 4 * cfg.n_frontend_tokens ** 2 \
+            * h * hd
+    return total * batch
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for one step of the given shape (global)."""
+    counts = param_counts(cfg)
+    n_active = counts["backbone_active"] + (
+        0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mm = 6 * n_active * tokens \
+            + 6 * cfg.vocab_size * cfg.d_model * tokens  # unembed fwd+bwd
+        attn = 3 * attention_flops(cfg, shape.seq_len, shape.global_batch,
+                                   "train")
+        return mm + attn
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n_active * tokens \
+            + 2 * cfg.vocab_size * cfg.d_model * tokens \
+            + attention_flops(cfg, shape.seq_len, shape.global_batch,
+                              "prefill")
+    tokens = shape.global_batch                      # decode: 1 token each
+    # at decode the encoder does not run and cross-attention K/V come from
+    # the prefill-time cache — exclude those parameters
+    d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    n_dec = n_active
+    if cfg.n_encoder_layers:
+        n_dec -= cfg.n_encoder_layers * (
+            d * h * hd + 2 * d * g * hd + h * hd * d + 2 * d * cfg.d_ff)
+    n_cross = sum(n * pattern.count("cross") + n * pattern.count("attn_cross")
+                  for pattern, n in cfg.layer_groups)
+    n_dec -= n_cross * 2 * d * g * hd                # cached cross K/V proj
+    return 2 * n_dec * tokens \
+        + 2 * cfg.vocab_size * cfg.d_model * tokens \
+        + attention_flops(cfg, 1, shape.global_batch, "decode",
+                          kv_len=shape.seq_len)

@@ -1,0 +1,239 @@
+"""Loop-aware cost extraction from compiled (SPMD-partitioned) HLO text.
+
+XLA's ``HloCostAnalysis`` (and hence ``compiled.cost_analysis()``) counts
+each ``while`` body **once**, ignoring trip counts — with layer stacks as
+``lax.scan`` this undercounts FLOPs/bytes/collective traffic by ~n_layers.
+This module walks the HLO call graph with per-computation multipliers:
+
+- computations are parsed into (ops, called-computation references),
+- each ``while`` body/condition inherits ``multiplier × trip_count``,
+  where the trip count is recovered from the loop condition's constant
+  bound (scan lowers to ``compare(counter, constant)``),
+- ``dot`` FLOPs are ``2 × numel(result) × prod(contracted dims)``,
+- collective bytes are operand sizes × multiplier,
+- HBM-byte proxy: dot operand+result bytes (the MXU-relevant traffic;
+  elementwise fusions are bandwidth-free in the roofline sense when fused
+  with dots, and are dominated by them at these shapes).
+
+Validated against a fully-unrolled lowering of the same cell (see
+EXPERIMENTS.md §Roofline methodology).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->", re.M)
+_CALL_REF = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=|branch_computations=\{)%?"
+    r"([\w\.\-]+)")
+_CALL_REF_MULTI = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)"
+    r"|while\(.*?\)[^\n]*?body=%?([\w\.\-]+)[^\n]*?condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _numel(dims) * _DTYPE_BYTES[dtype]
+
+
+def parse_computations(hlo: str) -> dict:
+    """Split HLO text into named computation bodies."""
+    comps = {}
+    name, lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if (line.startswith("ENTRY") or line.startswith("%")
+                or stripped.startswith("ENTRY")) and "->" in line \
+                and "{" in line:
+            m = _COMP_HDR.search(line)
+            if m:
+                name = m.group(1)
+                comps[name] = []
+                # register parameter shapes as synthetic defs
+                for pm in re.finditer(
+                        r"([\w\.\-]+): (" + "|".join(_DTYPE_BYTES)
+                        + r")\[([0-9,]*)\]", line):
+                    comps[name].append(
+                        f"%{pm.group(1)} = {pm.group(2)}[{pm.group(3)}] "
+                        f"parameter(0)")
+                if line.startswith("ENTRY") or stripped.startswith("ENTRY"):
+                    comps["__entry__"] = comps[name]
+                continue
+        if name is not None:
+            if stripped == "}":
+                name = None
+            else:
+                comps[name].append(stripped)
+    return comps
+
+
+def _trip_count(cond_lines) -> int:
+    """Largest integer constant in the loop condition ≙ scan bound."""
+    best = 1
+    for line in cond_lines:
+        if "constant(" in line:
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+    return best
+
+
+_TRIP_BC = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DEF_RE = re.compile(
+    r"^(?:ROOT )?%([\w\.\-]+) = \(?(" + "|".join(_DTYPE_BYTES)
+    + r")\[([0-9,]*)\]")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _symbol_tables(comps):
+    """op name -> (dtype, dims) per computation + global fallback."""
+    local = {}
+    glob = {}
+    for name, lines in comps.items():
+        tab = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                tab[m.group(1)] = (m.group(2), m.group(3))
+        local[name] = tab
+        glob.update(tab)
+    return local, glob
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:                      # fallback: biggest computation
+        entry = max(comps.values(), key=len)
+
+    local_tab, glob_tab = _symbol_tables(comps)
+
+    def shape_of(comp_name, op_name):
+        tab = local_tab.get(comp_name, {})
+        return tab.get(op_name) or glob_tab.get(op_name)
+
+    # multipliers via BFS over the call graph
+    mult = defaultdict(float)
+    seen_entry = [k for k, v in comps.items()
+                  if v is entry and k != "__entry__"][0]
+    mult[seen_entry] = 1.0
+    order = [seen_entry]
+    visited = {seen_entry}
+    while order:
+        cur = order.pop(0)
+        m = mult[cur]
+        for line in comps[cur]:
+            trip = 1.0
+            if " while(" in line or line.startswith("while("):
+                bc = _TRIP_BC.search(line)
+                if bc:
+                    trip = float(bc.group(1))
+                else:
+                    refs = _CALL_REF.findall(line)
+                    cond = next((r for r in refs if r in comps
+                                 and any("compare" in l for l in comps[r])),
+                                None)
+                    if cond is not None:
+                        trip = float(_trip_count(comps[cond]))
+            for ref in set(_CALL_REF.findall(line)):
+                if ref not in comps:
+                    continue
+                is_body = f"body=%{ref}" in line or f"body={ref}," in line
+                add = m * (trip if is_body else 1.0)
+                mult[ref] += add
+                if ref not in visited:
+                    visited.add(ref)
+                    order.append(ref)
+            mm = _CALL_REF_MULTI.search(line)
+            if mm:
+                for ref in re.findall(r"%?([\w\.\-]+)", mm.group(1)):
+                    if ref in comps and ref not in visited:
+                        mult[ref] += m
+                        visited.add(ref)
+                        order.append(ref)
+
+    flops = 0.0
+    flops_int8 = 0.0          # dots with both operands s8/u8 (MXU int8 path)
+    dot_bytes = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0.0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        if name == "__entry__" or mult[name] == 0:
+            continue
+        m = mult[name]
+        for line in lines:
+            if " dot(" in line:
+                dm = _DEF_RE.match(line)
+                if not dm:
+                    continue
+                res = (dm.group(2), dm.group(3))
+                args = line[line.index(" dot(") + 5:]
+                args = args[:args.index(")")]
+                names = _OPERANDS_RE.findall(args)
+                if len(names) < 2:
+                    continue
+                lhs = shape_of(name, names[0])
+                rhs = shape_of(name, names[1])
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                contracted = 1
+                if cm and cm.group(1) and lhs:
+                    ldims = lhs[1].split(",")
+                    for ci in cm.group(1).split(","):
+                        contracted *= int(ldims[int(ci)])
+                f = m * 2.0 * _numel(res[1]) * contracted
+                flops += f
+                if lhs and rhs and lhs[0] in ("s8", "u8") \
+                        and rhs[0] in ("s8", "u8"):
+                    flops_int8 += f
+                dot_bytes += m * (_shape_bytes(*res)
+                                  + (_shape_bytes(*lhs) if lhs else 0)
+                                  + (_shape_bytes(*rhs) if rhs else 0))
+                continue
+            for kind in _COLLECTIVES:
+                token = f" {kind}(" if f" {kind}(" in line \
+                    else (f" {kind}-start(" if f" {kind}-start(" in line
+                          else None)
+                if token is None:
+                    continue
+                args = line[line.index(token) + len(token):]
+                depth, end = 1, 0
+                for i, ch in enumerate(args):
+                    depth += ch == "("
+                    depth -= ch == ")"
+                    if depth == 0:
+                        end = i
+                        break
+                names = _OPERANDS_RE.findall(args[:end])
+                b = sum(_shape_bytes(*shape_of(name, nm))
+                        for nm in names if shape_of(name, nm))
+                if b == 0:                       # fallback: result bytes
+                    dm = _DEF_RE.match(line)
+                    if dm:
+                        b = _shape_bytes(dm.group(2), dm.group(3))
+                coll[kind] += m * b
+                coll_counts[kind] += m
+                break
+    return {"flops": flops, "flops_int8": flops_int8,
+            "dot_bytes": dot_bytes,
+            "collective_bytes": coll,
+            "collective_total": sum(coll.values()),
+            "collective_counts": coll_counts}

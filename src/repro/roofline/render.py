@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL artifacts."""
+
+from __future__ import annotations
+
+import json
+
+
+def load(path):
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def dryrun_table(recs):
+    hdr = ("| arch | shape | mesh | status | compile | args/dev | "
+           "temp/dev | collectives (ag/ar/rs/a2a/cp) |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL: {r.get('error','')[:60]} | | | | |")
+            continue
+        m = r["memory"]
+        c = r["collectives"]["counts"]
+        cc = "/".join(str(int(c.get(k, 0))) for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']}s | {m['argument_bytes']/2**30:.2f} GiB | "
+            f"{m['temp_bytes']/2**30:.2f} GiB | {cc} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def _fresh_model_flops(arch, shape_name):
+    """Recompute analytic MODEL_FLOPS with the current formulas."""
+    try:
+        from repro.configs.base import SHAPES
+        from repro.configs.registry import get_config
+        from repro.roofline.analysis import model_flops
+        return model_flops(get_config(arch), SHAPES[shape_name])
+    except Exception:   # noqa: BLE001
+        return None
+
+
+def roofline_table(recs, chips=256):
+    hdr = ("| arch | shape | compute | memory | collective | bottleneck | "
+           "MODEL_FLOPS | useful | roofline-MFU |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        mf = _fresh_model_flops(r["arch"], r["shape"]) or ro["model_flops"]
+        useful = mf / (ro["flops"] * chips) if ro["flops"] else 0
+        step = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        mfu = mf / (chips * 197e12 * step) if step else 0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(ro['compute_s'])} | "
+            f"{_fmt_s(ro['memory_s'])} | {_fmt_s(ro['collective_s'])} | "
+            f"**{ro['bottleneck']}** | {mf:.2e} | "
+            f"{useful:.2f} | {mfu:.3f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    import sys
+    recs = load(sys.argv[1])
+    print("### Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Gradient compression for the cross-pod (DCN) data-parallel axis.
+
+ITA's thesis — 8-bit integers with calibrated scales lose little — applies
+to *gradient traffic* too: we reuse the same symmetric int8 machinery with
+**error feedback** (the quantization residual is carried to the next step,
+so compression error accumulates to zero instead of biasing the update).
+
+Two layers:
+- ``ef_compress / ef_decompress`` — pure pytree transforms usable inside
+  any train step (compress -> (simulated) wire -> decompress), with the EF
+  state threaded alongside the optimizer state.
+- ``compressed_psum`` — a shard_map building block performing the actual
+  int8 all-reduce on a named axis (all-gather int8 shards + local f32
+  reduction, avoiding int8 overflow), demonstrating the wire-level
+  collective for the ``pod`` axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import INT8_MAX, INT8_MIN
+
+
+def init_ef_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def ef_compress(grads, ef_state):
+    """Returns (int8 pytree, scales pytree, new_ef_state)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / INT8_MAX
+        q = jnp.clip(jnp.round(g / scale), INT8_MIN, INT8_MAX)
+        err = g - q * scale
+        return q.astype(jnp.int8), scale, err
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(ef_state)
+    qs, scales, errs = zip(*[one(g, e) for g, e in zip(flat, eflat)])
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def ef_decompress(q_grads, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        q_grads, scales)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-reduce over ``axis_name`` (use inside shard_map):
+    quantize locally -> all_gather the int8 shards (+f32 scales) ->
+    dequantize-and-sum locally. Wire bytes: ~1/4 of f32 psum."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / INT8_MAX
+    q = jnp.clip(jnp.round(x / scale), INT8_MIN, INT8_MAX).astype(jnp.int8)
+    qs = jax.lax.all_gather(q, axis_name)            # (n, ...) int8 on wire
+    ss = jax.lax.all_gather(scale, axis_name)
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+
+
+def make_compressed_grad_allreduce(mesh, axis: str = "pod"):
+    """shard_map-wrapped compressed mean over the pod axis for a grad
+    pytree already sharded over the in-pod mesh axes."""
+    from jax.sharding import PartitionSpec as P
+
+    def mean_tree(grads):
+        n = mesh.shape[axis]
+
+        def impl(g):
+            return jax.tree.map(
+                lambda t: compressed_psum(t, axis) / n, g)
+
+        spec = jax.tree.map(lambda _: P(), grads)
+        return jax.shard_map(impl, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec)(grads)
+
+    return mean_tree

@@ -1,0 +1,129 @@
+"""Fault-tolerant training driver (1000+ node posture).
+
+Mechanisms (each unit-tested; the container is single-process, so "node
+failure" is injected, but every code path is the real one):
+
+- **Checkpoint/restart**: async checkpoints every ``ckpt_every`` steps
+  (params + optimizer + data-pipeline state); on (re)start the driver
+  restores the latest checkpoint and replays the data pipeline to the
+  exact step — bitwise-identical continuation (tested).
+- **Elastic re-mesh**: checkpoints are mesh-independent; ``run()`` accepts
+  any mesh, so a job checkpointed on 2 pods restarts on 1 (or 4) with the
+  same model state (re-sharded on restore).
+- **Straggler mitigation**: a step-time watchdog tracks a robust moving
+  median; steps slower than ``straggler_factor``× median are logged and
+  counted. On a real fleet this signal feeds the controller that evicts /
+  re-shards around the slow host (here: surfaced in ``stats`` and the
+  log). Persistent stragglers trigger a checkpoint so any subsequent
+  eviction loses zero work.
+- **Crash safety**: checkpoint writes are atomic (tmp+rename); SIGTERM-
+  style preemption can be simulated with ``inject_failure_at``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointing import Checkpointer
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 2.0
+    straggler_ckpt_threshold: int = 3     # consecutive slow steps
+    inject_failure_at: int | None = None  # simulate preemption (tests)
+
+
+class TrainDriver:
+    def __init__(self, ft: FTConfig, train_step, params, opt_state,
+                 pipeline, param_shardings=None, opt_shardings=None):
+        self.ft = ft
+        self.step_fn = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.pipeline = pipeline
+        self.ckpt = Checkpointer(ft.ckpt_dir, keep=ft.keep)
+        self.p_sh, self.o_sh = param_shardings, opt_shardings
+        self.step = 0
+        self.step_times: list[float] = []
+        self.straggler_events = 0
+        self._slow_streak = 0
+
+    # -- restart ------------------------------------------------------------
+
+    def maybe_restore(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        shards = ({"params": self.p_sh, "opt": self.o_sh}
+                  if self.p_sh is not None else None)
+        restored, meta = self.ckpt.restore(state, step=latest,
+                                           shardings=shards)
+        self.params, self.opt_state = restored["params"], restored["opt"]
+        self.pipeline.load_state_dict(meta["extra"]["pipeline"])
+        self.step = meta["step"]
+        return True
+
+    # -- main loop ----------------------------------------------------------
+
+    def _watchdog(self, dt: float):
+        self.step_times.append(dt)
+        hist = self.step_times[-32:]
+        if len(hist) >= 8:
+            med = float(np.median(hist[:-1]))
+            if dt > self.ft.straggler_factor * med:
+                self.straggler_events += 1
+                self._slow_streak += 1
+                print(f"[ft] straggler: step {self.step} took {dt:.3f}s "
+                      f"(median {med:.3f}s)", flush=True)
+                if self._slow_streak >= self.ft.straggler_ckpt_threshold:
+                    print("[ft] persistent straggler -> protective "
+                          "checkpoint", flush=True)
+                    self._save()
+                    self._slow_streak = 0
+            else:
+                self._slow_streak = 0
+
+    def _save(self, blocking: bool = False):
+        if getattr(self, "_last_saved", None) == self.step:
+            if blocking:
+                self.ckpt.wait()
+            return
+        self._last_saved = self.step
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"pipeline": self.pipeline.state_dict()},
+                       blocking=blocking)
+
+    def run(self, num_steps: int, log_every: int = 10):
+        metrics = {}
+        while self.step < num_steps:
+            if self.ft.inject_failure_at is not None \
+                    and self.step == self.ft.inject_failure_at:
+                self.ckpt.wait()
+                raise RuntimeError(f"injected node failure at step "
+                                   f"{self.step}")
+            batch = self.pipeline.next()
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            self._watchdog(time.time() - t0)
+            self.step += 1
+            if self.step % self.ft.ckpt_every == 0:
+                self._save()
+            if log_every and self.step % log_every == 0:
+                print(f"[train] step {self.step} "
+                      f"loss {float(metrics['loss']):.4f} "
+                      f"({self.step_times[-1]:.2f}s)", flush=True)
+        self._save(blocking=True)
+        self.ckpt.wait()
+        return metrics

@@ -1,0 +1,158 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode; integer results must match EXACTLY)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import EPS_MAX
+from repro.kernels.int8_matmul.ops import int8_matmul
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+from repro.kernels.ita_attention import ref as AR
+from repro.kernels.ita_attention.ops import ita_attention
+from repro.kernels.ita_softmax.ops import ita_softmax
+from repro.kernels.ita_softmax.ref import ita_softmax_ref
+
+rng = np.random.default_rng(0)
+
+
+def _i8(*shape):
+    return rng.integers(-128, 128, shape, dtype=np.int8)
+
+
+# ---------------------------------------------------------------------------
+# int8 weight-stationary matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (100, 200, 96),
+                                   (256, 128, 128), (33, 65, 17)])
+@pytest.mark.parametrize("schedule", ["tpu", "weight_stationary"])
+def test_int8_matmul_sweep(m, k, n, schedule):
+    x, w = _i8(m, k), _i8(k, n)
+    b = rng.integers(-1000, 1000, (n,), dtype=np.int32)
+    mult = np.float32(0.002)
+    ref = int8_matmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                          jnp.broadcast_to(mult, (n,)))
+    out = int8_matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), mult,
+                      block_m=32, block_n=16, block_k=32, schedule=schedule)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_int8_matmul_per_channel_and_batched():
+    x = _i8(2, 3, 40)                       # leading batch dims
+    w = _i8(40, 24)
+    mult = rng.uniform(1e-4, 1e-2, (24,)).astype(np.float32)
+    out = int8_matmul(jnp.asarray(x), jnp.asarray(w), None,
+                      jnp.asarray(mult), block_m=8, block_n=8, block_k=8)
+    ref = int8_matmul_ref(jnp.asarray(x.reshape(6, 40)), jnp.asarray(w),
+                          jnp.zeros((24,), jnp.int32), jnp.asarray(mult))
+    np.testing.assert_array_equal(np.asarray(out).reshape(6, 24),
+                                  np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# standalone streaming softmax kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,c,bc", [(16, 128, 64), (48, 300, 128),
+                                    (8, 64, 64), (128, 512, 128)])
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_ita_softmax_kernel_sweep(r, c, bc, adaptive):
+    x = _i8(r, c)
+    mask = (rng.random((r, c)) > 0.2).astype(np.int8)
+    out = ita_softmax(jnp.asarray(x), jnp.asarray(mask), block_r=16,
+                      block_c=bc, adaptive=adaptive)
+    pad = (-c) % bc
+    xp = np.pad(x, ((0, 0), (0, pad)))
+    mp = np.pad(mask, ((0, 0), (0, pad)))
+    ref = ita_softmax_ref(jnp.asarray(xp), jnp.asarray(mp),
+                          num_parts=(c + pad) // bc, adaptive=adaptive)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref)[:, :c])
+
+
+# ---------------------------------------------------------------------------
+# fused attention kernels
+# ---------------------------------------------------------------------------
+
+SQ = np.float32(0.05)
+SO = np.float32(0.02)
+
+
+def _attn_ref(q, k, v, causal, window, mode, adaptive, bkv, q_offset=0):
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    lmult = np.float32(SQ * SQ / (np.sqrt(d) * EPS_MAX))
+    omult = np.float32(SQ / SO)
+    return AR.ita_attention_stream_ref(
+        jnp.asarray(q.reshape(b * h, sq, d)),
+        jnp.asarray(k.reshape(b * h, skv, d)),
+        jnp.asarray(v.reshape(b * h, skv, d)),
+        lmult, omult, skv, causal=causal, window=window, adaptive=adaptive,
+        block_kv=bkv, mode=mode, q_offset=q_offset)
+
+
+@pytest.mark.parametrize("mode", ["onepass", "twopass"])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 48)])
+@pytest.mark.parametrize("sq,skv", [(64, 192), (32, 32), (128, 256)])
+def test_ita_attention_sweep(mode, causal, window, sq, skv):
+    b, h, d = 2, 2, 64
+    q, k, v = _i8(b, h, sq, d), _i8(b, h, skv, d), _i8(b, h, skv, d)
+    out = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        SQ, SQ, SQ, SO, causal=causal, window=window,
+                        mode=mode, adaptive=True, block_q=32, block_kv=64)
+    ref = _attn_ref(q, k, v, causal, window, mode, True, 64)
+    np.testing.assert_array_equal(
+        np.asarray(out).reshape(b * h, sq, d), np.asarray(ref))
+
+
+def test_ita_attention_gqa_and_decode():
+    b, hq, hkv, d, skv = 1, 8, 2, 64, 512
+    q, k, v = _i8(b, hq, 1, d), _i8(b, hkv, skv, d), _i8(b, hkv, skv, d)
+    out = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        SQ, SQ, SQ, SO, q_offset=skv - 1, causal=True,
+                        mode="onepass", block_q=8, block_kv=128)
+    kr = np.repeat(k, 4, axis=1)
+    vr = np.repeat(v, 4, axis=1)
+    ref = _attn_ref(q, kr, vr, True, 0, "onepass", True, 128,
+                    q_offset=skv - 1)
+    np.testing.assert_array_equal(
+        np.asarray(out).reshape(b * hq, 1, d), np.asarray(ref))
+
+
+def test_twopass_matches_paper_oneshot_single_tile():
+    """Single kv tile -> streaming == one-shot paper semantics exactly."""
+    b, h, s, d = 1, 2, 64, 64
+    q, k, v = _i8(b, h, s, d), _i8(b, h, s, d), _i8(b, h, s, d)
+    out = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        SQ, SQ, SQ, SO, causal=True, mode="twopass",
+                        adaptive=False, block_q=64, block_kv=64)
+    lmult = np.float32(SQ * SQ / (np.sqrt(d) * EPS_MAX))
+    ref, _ = AR.ita_attention_ref(
+        jnp.asarray(q.reshape(b * h, s, d)), jnp.asarray(k.reshape(b * h, s, d)),
+        jnp.asarray(v.reshape(b * h, s, d)), lmult, np.float32(SQ / SO), s,
+        causal=True, adaptive=False)
+    np.testing.assert_array_equal(np.asarray(out).reshape(b * h, s, d),
+                                  np.asarray(ref))
+
+
+def test_attention_accuracy_vs_float():
+    """End-to-end: ITA integer attention approximates float attention on
+    realistically-scaled inputs (the paper's Fig. 5 effect)."""
+    b, h, s, d = 2, 4, 128, 64
+    qf = rng.normal(0, 1, (b, h, s, d)).astype(np.float32)
+    kf = rng.normal(0, 1, (b, h, s, d)).astype(np.float32)
+    vf = rng.normal(0, 1, (b, h, s, d)).astype(np.float32)
+    s_act = np.float32(3.0 / 127)
+    q8 = np.clip(np.round(qf / s_act), -128, 127).astype(np.int8)
+    k8 = np.clip(np.round(kf / s_act), -128, 127).astype(np.int8)
+    v8 = np.clip(np.round(vf / s_act), -128, 127).astype(np.int8)
+    out8 = ita_attention(jnp.asarray(q8), jnp.asarray(k8), jnp.asarray(v8),
+                         s_act, s_act, s_act, np.float32(2.0 / 127),
+                         causal=True, mode="onepass")
+    out = np.asarray(out8).astype(np.float32) * (2.0 / 127)
+    ref = np.asarray(AR.float_attention_ref(
+        jnp.asarray(qf.reshape(b * h, s, d)),
+        jnp.asarray(kf.reshape(b * h, s, d)),
+        jnp.asarray(vf.reshape(b * h, s, d)), causal=True))
+    rel = np.abs(out.reshape(b * h, s, d) - ref).mean() / np.abs(ref).mean()
+    assert rel < 0.25, rel

@@ -1,0 +1,72 @@
+"""Quantization / requantization unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quant as Q
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.05, 50.0))
+def test_quant_roundtrip_error_bounded(seed, spread):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, spread, (64,)).astype(np.float32))
+    qt = Q.quantize_tensor(x)
+    err = jnp.abs(qt.dequantize() - x)
+    # in-range values: error <= scale/2; clipped values can exceed
+    in_range = jnp.abs(x) <= qt.scale * 127
+    assert float(jnp.max(jnp.where(in_range, err, 0))) <= float(qt.scale) / 2 + 1e-6
+
+
+def test_requant_matches_fixed_point_oracle():
+    """TPU f32-multiply requant vs the ASIC fixed-point multiplier+shift:
+    agree within 1 LSB (ties can round differently)."""
+    rng = np.random.default_rng(1)
+    acc = rng.integers(-2 ** 23, 2 ** 23, (4096,), dtype=np.int32)
+    for ratio in (0.00037, 0.0121, 0.49, 0.97):
+        a = np.asarray(Q.requantize(jnp.asarray(acc), ratio)).astype(np.int32)
+        b = Q.requantize_fixedpoint_np(acc, ratio).astype(np.int32)
+        assert np.max(np.abs(a - b)) <= 1
+        assert (a != b).mean() < 0.02
+
+
+def test_quantize_multiplier_decomposition():
+    for r in (1e-4, 0.3, 0.999, 1.7):
+        m, shift = Q.quantize_multiplier(r)
+        assert 2 ** 30 <= m < 2 ** 31
+        np.testing.assert_allclose(m * 2.0 ** -shift, r, rtol=1e-8)
+
+
+def test_fake_quant_ste():
+    x = jnp.asarray([-10.0, -0.2, 0.0, 0.3, 10.0])
+    scale = jnp.asarray(0.05)  # clip at +-6.35
+    y = Q.fake_quant(x, scale)
+    np.testing.assert_allclose(np.asarray(y),
+                               [-6.4, -0.2, 0.0, 0.3, 6.35], atol=1e-6)
+    g = jax.grad(lambda v: Q.fake_quant(v, scale).sum())(x)
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 0])
+
+
+def test_int8_matmul_ref_bias_semantics():
+    rng = np.random.default_rng(2)
+    x = rng.integers(-128, 128, (8, 16), dtype=np.int8)
+    w = rng.integers(-128, 128, (16, 4), dtype=np.int8)
+    b = rng.integers(-100, 100, (4,), dtype=np.int32)
+    acc = Q.int8_matmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    ref = x.astype(np.int32) @ w.astype(np.int32) + b
+    np.testing.assert_array_equal(np.asarray(acc), ref)
+
+
+def test_quantized_linear_end_to_end():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (32, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.05, (64, 32)).astype(np.float32))
+    wq = Q.quantize_tensor(w)
+    out, acc = Q.quantized_linear(x, wq)
+    y_ref = np.asarray(x) @ np.asarray(w)
+    y_hat = np.asarray(out.dequantize())
+    rel = np.abs(y_hat - y_ref).mean() / (np.abs(y_ref).mean() + 1e-9)
+    assert rel < 0.05
