@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
 | bench_attention   | §V-D speedup + Table I (int8/bf16, bytes)|
 | bench_dataflow    | §III weight-stationary bandwidth eq.     |
 | bench_kernels     | kernel VMEM/traffic structure + checks   |
+| bench_decode      | int8 KV-cache decode vs full recompute   |
 | bench_roofline    | §Roofline table from dry-run artifacts   |
 """
 
@@ -18,11 +19,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_attention, bench_dataflow, bench_kernels,
-                            bench_roofline, bench_softmax_mae)
+    from benchmarks import (bench_attention, bench_dataflow, bench_decode,
+                            bench_kernels, bench_roofline, bench_softmax_mae)
     print("name,us_per_call,derived")
     for mod in (bench_softmax_mae, bench_dataflow, bench_attention,
-                bench_kernels, bench_roofline):
+                bench_kernels, bench_decode, bench_roofline):
         try:
             mod.main()
         except Exception as e:  # noqa: BLE001

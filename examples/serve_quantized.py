@@ -7,14 +7,12 @@ side-by-side float-attention run for output comparison.
     PYTHONPATH=src python examples/serve_quantized.py
 """
 
-import time
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import forward, init_caches, init_model
+from repro.models import init_model
+from repro.runtime.generate import generate
 
 CFG_BASE = dict(
     name="serve-demo", family="dense",
@@ -28,24 +26,8 @@ BATCH, PROMPT, GEN = 8, 48, 24
 
 
 def serve(cfg, params, prompts):
-    prefill = jax.jit(lambda p, t, c: forward(p, t, cfg, mode="prefill",
-                                              caches=c)[:2])
-    decode = jax.jit(lambda p, t, c, pos: forward(p, t, cfg, mode="decode",
-                                                  caches=c, pos0=pos)[:2],
-                     donate_argnums=(2,))
-    caches = init_caches(cfg, BATCH, max_len=PROMPT + GEN)
-    t0 = time.time()
-    logits, caches = prefill(params, prompts, caches)
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    toks = [tok]
-    for i in range(GEN - 1):
-        logits, caches = decode(params, tok, caches,
-                                jnp.asarray(PROMPT + i))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        toks.append(tok)
-    out = jnp.concatenate(toks, 1)
-    jax.block_until_ready(out)
-    return out, time.time() - t0
+    res = generate(params, cfg, prompts, GEN)
+    return res.tokens, res.prefill_s + res.decode_s
 
 
 def main():

@@ -24,6 +24,14 @@ Integer semantics notes:
   exact in f32 below 2^24), so paper mode remains bit-exact integer.
 - onepass uses ``u = 128 >> k`` so the numerator operand fits int8 for the
   MXU; the missing factor 2 folds into the output requant.
+
+- ``decode`` (serving): the onepass dataflow specialised to incremental
+  decode against a KV-cache ring buffer. The q grid dimension disappears
+  (one tile holds all ``sq <= 8`` queries), KV tiles wholly beyond the
+  cache's valid prefix are *skipped* — with a max_len ring only
+  ``ceil(kv_len/bkv)`` of the tiles do work — and the requant multipliers
+  are per-(batch·head) rows so per-head cache quantization scales flow
+  straight into the kernel.
 """
 
 from __future__ import annotations
@@ -143,23 +151,84 @@ def av_en_kernel(a_ref, inv_ref, er_ref, max_ref, v_ref, omult_ref,
         o_ref[0] = jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
 
 
+def decode_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
+                  o_ref, m_ref, sigma_ref, acc_ref,
+                  *, causal: bool, window: int, adaptive: bool,
+                  bq: int, bkv: int, kv_4d: bool):
+    """Onepass dataflow without a q grid axis (decode: sq <= one tile).
+
+    ``kv_4d``: K/V refs carry cache-native (1, bkv, 1, d) blocks sliced
+    straight out of a (B, C, G, hd) ring buffer — no host-side transpose
+    or GQA head broadcast ever materializes.
+    """
+    j = pl.program_id(1)
+    last_j = pl.num_programs(1) - 1
+    kv_len = meta_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_SENTINEL)
+        sigma_ref[...] = jnp.zeros_like(sigma_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Ring buffers are allocated at max_len; tiles wholly beyond the valid
+    # prefix are fully masked (max/sigma/acc all no-ops) — skip the MXU work.
+    @pl.when(j * bkv < kv_len)
+    def _tile():
+        k_tile = k_ref[0, :, 0] if kv_4d else k_ref[0]
+        v_tile = v_ref[0, :, 0] if kv_4d else v_ref[0]
+        logits = _qk_logits(q_ref[0], k_tile, lmult_ref[0, 0])
+        valid = tile_mask(0, j, bq, bkv, causal, window, kv_len,
+                          meta_ref[0, 1])
+        u, delta = da_update(m_ref, sigma_ref, logits, valid)
+        corr = jnp.exp2(-delta.astype(jnp.float32))
+        pv = jax.lax.dot_general(u, v_tile.astype(jnp.int32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+        acc_ref[...] = acc_ref[...] * corr + pv.astype(jnp.float32)
+
+    @pl.when(j == last_j)
+    def _finalize():
+        if adaptive:
+            inv, e_r = adaptive_inverse(sigma_ref[...])
+        else:
+            inv = paper_inverse(sigma_ref[...])
+            e_r = jnp.full_like(inv, 8)
+        scale = 2.0 * inv.astype(jnp.float32) * jnp.exp2(
+            -(e_r + 8).astype(jnp.float32)) * omult_ref[0, 0]
+        y = jnp.round(acc_ref[...] * scale)
+        o_ref[0] = jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
 def _specs_bh(block, index):
     return pl.BlockSpec(block, index)
+
+
+def _row_mults(logit_mult, out_mult, bh):
+    """Broadcast scalar or per-row requant multipliers to (bh, 1) f32."""
+    lm = jnp.broadcast_to(jnp.asarray(logit_mult, jnp.float32).reshape(-1),
+                          (bh,)).reshape(bh, 1)
+    om = jnp.broadcast_to(jnp.asarray(out_mult, jnp.float32).reshape(-1),
+                          (bh,)).reshape(bh, 1)
+    return lm, om
 
 
 def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
                           q_offset=0, causal: bool, window: int = 0,
                           adaptive: bool = True, block_q: int = 128,
-                          block_kv: int = 128, interpret: bool = True):
-    """q (BH, Sq, D) int8; k/v (BH, Skv, D) int8; returns (BH, Sq, D) int8."""
+                          block_kv: int = 128, kv_rep: int = 1,
+                          interpret: bool = True):
+    """q (BH, Sq, D) int8; k/v (BH/kv_rep, Skv, D) int8; returns (BH, Sq, D)
+    int8. GQA: q row r reads kv row r // kv_rep via the index map — the KV
+    head broadcast never materializes."""
     bh, sq, d = q_q.shape
     skv = k_q.shape[1]
     bq, bkv = min(block_q, sq), min(block_kv, skv)
     assert sq % bq == 0 and skv % bkv == 0
+    assert k_q.shape[0] * kv_rep == bh, (k_q.shape, kv_rep, bh)
     kern = functools.partial(onepass_kernel, causal=causal, window=window,
                              adaptive=adaptive, bq=bq, bkv=bkv)
-    lmult = jnp.asarray(logit_mult, jnp.float32).reshape(1, 1)
-    omult = jnp.asarray(out_mult, jnp.float32).reshape(1, 1)
+    lmult, omult = _row_mults(logit_mult, out_mult, bh)
     meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
                       jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
     return pl.pallas_call(
@@ -167,10 +236,10 @@ def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
         grid=(bh, sq // bq, skv // bkv),
         in_specs=[
             _specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
-            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
-            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
             pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
         ],
         out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
@@ -185,15 +254,17 @@ def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
 def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
                           q_offset=0, causal: bool, window: int = 0,
                           adaptive: bool = False, block_q: int = 128,
-                          block_kv: int = 128, interpret: bool = True):
+                          block_kv: int = 128, kv_rep: int = 1,
+                          interpret: bool = True):
     """Paper-faithful dataflow. Returns (out int8, a_mat int8) — A is the
-    materialized int8 attention matrix (written once, read once)."""
+    materialized int8 attention matrix (written once, read once).
+    GQA via ``kv_rep`` index maps as in onepass."""
     bh, sq, d = q_q.shape
     skv = k_q.shape[1]
     bq, bkv = min(block_q, sq), min(block_kv, skv)
     assert sq % bq == 0 and skv % bkv == 0
-    lmult = jnp.asarray(logit_mult, jnp.float32).reshape(1, 1)
-    omult = jnp.asarray(out_mult, jnp.float32).reshape(1, 1)
+    assert k_q.shape[0] * kv_rep == bh, (k_q.shape, kv_rep, bh)
+    lmult, omult = _row_mults(logit_mult, out_mult, bh)
     meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
                       jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
 
@@ -204,8 +275,8 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
         grid=(bh, sq // bq, skv // bkv),
         in_specs=[
             _specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
-            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
             pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
         ],
         out_specs=[
@@ -239,8 +310,8 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             _specs_bh((1, bq), lambda b, i, j: (b, i)),
             _specs_bh((1, bq), lambda b, i, j: (b, i)),
             _specs_bh((1, bq), lambda b, i, j: (b, i)),
-            _specs_bh((1, bkv, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),
+            _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
             pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
         ],
         out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
@@ -249,3 +320,60 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
         interpret=interpret,
     )(a_mat, sigma_inv, e_r, row_max, v_q, omult, meta)
     return out, a_mat
+
+
+def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
+                         q_offset=0, causal: bool = True, window: int = 0,
+                         adaptive: bool = True, block_kv: int = 128,
+                         kv_rep: int = 1, hq: int | None = None,
+                         interpret: bool = True):
+    """Fused decode step: q (BH, Sq<=8, D) int8 against an int8 KV ring
+    buffer with ``kv_len`` valid entries. Single q tile (no q grid axis);
+    KV tiles past ``kv_len`` are skipped inside the kernel, so cost scales
+    with the *occupied* prefix, not the ring capacity. Streaming DA
+    semantics are identical to ``onepass`` at equal ``block_kv`` — decode
+    outputs are bit-identical to the matching prefill rows.
+
+    K/V layouts (chosen by shape):
+    - 3D ``(BH/kv_rep, C, D)``: kernel layout; GQA via row index map.
+    - 4D ``(B, C, G, D)``: cache-native ring-buffer layout (requires
+      ``hq``); blocks are gathered by index map — the per-step transpose
+      and head broadcast a host-side relayout would cost never happen.
+    """
+    bh, sq, d = q_q.shape
+    kv_4d = k_q.ndim == 4
+    skv = k_q.shape[1]                      # seq axis in both layouts
+    bkv = min(block_kv, skv)
+    assert skv % bkv == 0, (skv, bkv)
+    kern = functools.partial(decode_kernel, causal=causal, window=window,
+                             adaptive=adaptive, bq=sq, bkv=bkv, kv_4d=kv_4d)
+    lmult, omult = _row_mults(logit_mult, out_mult, bh)
+    meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
+                      jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
+    if kv_4d:
+        assert hq is not None and bh % hq == 0
+        # q row r = batch * hq + head  ->  (batch, kv tile, kv head)
+        kv_spec = _specs_bh(
+            (1, bkv, 1, d),
+            lambda r, j: (r // hq, j, (r % hq) // kv_rep, 0))
+    else:
+        assert k_q.shape[0] * kv_rep == bh, (k_q.shape, kv_rep, bh)
+        kv_spec = _specs_bh((1, bkv, d), lambda r, j: (r // kv_rep, j, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(bh, skv // bkv),
+        in_specs=[
+            _specs_bh((1, sq, d), lambda b, j: (b, 0, 0)),
+            kv_spec,
+            kv_spec,
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 2), lambda b, j: (0, 0)),
+        ],
+        out_specs=_specs_bh((1, sq, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((sq, 1), jnp.int32),
+                        pltpu.VMEM((sq, 1), jnp.int32),
+                        pltpu.VMEM((sq, d), jnp.float32)],
+        interpret=interpret,
+    )(q_q, k_q, v_q, lmult, omult, meta)

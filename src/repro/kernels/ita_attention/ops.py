@@ -1,10 +1,20 @@
 """Jitted public wrapper for the fused ITA attention kernels.
 
-Handles (batch, heads, seq, dim) layouts, GQA head-group broadcast, padding
-to block multiples and the quantization-scale plumbing:
+Handles (batch, heads, seq, dim) layouts, GQA head-group sharing (via
+kernel index maps — no broadcast copies), padding to block multiples and
+the quantization-scale plumbing:
 
     logit_mult = s_q * s_k / (sqrt(d) * EPS_MAX)   (requant onto ITA's grid)
     out_mult   = s_v / s_out
+
+Scales may be scalars (per-tensor, the QAT-calibrated path) or per-head
+vectors — ``s_q``/``s_out`` of shape (Hq,), ``s_k``/``s_v`` of shape (Hkv,)
+(per-head KV-cache quantization, see ``repro.runtime.kv_cache``); the
+multipliers are resolved to one value per (batch·head) kernel row.
+
+Modes: ``onepass`` (flash-style, default), ``twopass`` (paper-faithful A
+matrix in HBM), ``decode`` (onepass specialised to a single query tile
+against a KV ring buffer — skips q-tiling and invalid KV tiles).
 """
 
 from __future__ import annotations
@@ -16,66 +26,93 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import EPS_MAX
-from repro.kernels.ita_attention.kernel import (ita_attention_onepass,
+from repro.kernels.ita_attention.kernel import (ita_attention_decode,
+                                                ita_attention_onepass,
                                                 ita_attention_twopass)
 
 
 def _pad_seq(x, mult):
+    """Zero-pad the seq axis (axis 1, any rank) to a multiple of ``mult``."""
     pad = (-x.shape[1]) % mult
     if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
     return x
+
+
+def _per_head(s, h):
+    """Scalar -> (h,); (h,) passes through."""
+    s = jnp.asarray(s, jnp.float32).reshape(-1)
+    if s.shape[0] == 1:
+        return jnp.broadcast_to(s, (h,))
+    assert s.shape[0] == h, (s.shape, h)
+    return s
 
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "mode", "adaptive", "block_q", "block_kv",
-    "interpret"))
+    "kv_layout", "interpret"))
 def ita_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
                   s_q: jax.Array | float, s_k: jax.Array | float,
                   s_v: jax.Array | float, s_out: jax.Array | float, *,
                   q_offset: jax.Array | int = 0, kv_len: jax.Array | int | None = None,
                   causal: bool = True, window: int = 0, mode: str = "onepass",
                   adaptive: bool = True, block_q: int = 128,
-                  block_kv: int = 128, interpret: bool = True) -> jax.Array:
+                  block_kv: int = 128, kv_layout: str = "bhsd",
+                  interpret: bool = True) -> jax.Array:
     """Quantized multi-head attention with the ITA integer softmax.
 
-    ``q_q``: (B, Hq, Sq, D) int8; ``k_q``/``v_q``: (B, Hkv, Skv, D) int8.
-    GQA: Hkv must divide Hq; KV heads are broadcast per group.
+    ``q_q``: (B, Hq, Sq, D) int8; ``k_q``/``v_q``: (B, Hkv, Skv, D) int8
+    (``kv_layout="bhsd"``) or, for ``mode="decode"``, cache-native
+    (B, Skv, Hkv, D) ring buffers (``kv_layout="bsgd"`` — consumed in
+    place via kernel index maps, no transpose/broadcast copies).
+    GQA: Hkv must divide Hq; KV heads are shared per group via index
+    maps — the broadcast never materializes.
     ``q_offset``: logical position of query 0 (decode: valid_kv - Sq).
     ``kv_len``: valid prefix of the KV cache (defaults to Skv).
     Returns (B, Hq, Sq, D) int8 at scale ``s_out``.
     """
     b, hq, sq, d = q_q.shape
-    hkv, skv = k_q.shape[1], k_q.shape[2]
+    if kv_layout == "bsgd":
+        assert mode == "decode", "bsgd layout is decode-only"
+        skv, hkv = k_q.shape[1], k_q.shape[2]
+    else:
+        hkv, skv = k_q.shape[1], k_q.shape[2]
     assert hq % hkv == 0, (hq, hkv)
-    if hkv != hq:
-        rep = hq // hkv
-        k_q = jnp.repeat(k_q, rep, axis=1)
-        v_q = jnp.repeat(v_q, rep, axis=1)
+    rep = hq // hkv
 
-    qf = q_q.reshape(b * hq, sq, d)
-    kf = k_q.reshape(b * hq, skv, d)
-    vf = v_q.reshape(b * hq, skv, d)
+    # per-(batch*head) requant multipliers (rows are b-major, head-minor)
+    sk_h = jnp.repeat(_per_head(s_k, hkv), rep)
+    sv_h = jnp.repeat(_per_head(s_v, hkv), rep)
+    lmult = _per_head(s_q, hq) * sk_h / (np.sqrt(d) * EPS_MAX)
+    omult = sv_h / _per_head(s_out, hq)
+    lmult = jnp.tile(lmult, b)
+    omult = jnp.tile(omult, b)
 
     bq = min(block_q, max(8, sq))
     bkv = min(block_kv, max(128, skv)) if skv >= 128 else skv
-    qf = _pad_seq(qf, bq)
-    kf = _pad_seq(kf, bkv)
-    vf = _pad_seq(vf, bkv)
-
-    lmult = jnp.asarray(s_q, jnp.float32) * jnp.asarray(s_k, jnp.float32) \
-        / (np.sqrt(d) * EPS_MAX)
-    omult = jnp.asarray(s_v, jnp.float32) / jnp.asarray(s_out, jnp.float32)
+    qf = _pad_seq(q_q.reshape(b * hq, sq, d), bq)
+    if kv_layout == "bsgd":
+        kf = _pad_seq(k_q, bkv)
+        vf = _pad_seq(v_q, bkv)
+    else:
+        kf = _pad_seq(k_q.reshape(b * hkv, skv, d), bkv)
+        vf = _pad_seq(v_q.reshape(b * hkv, skv, d), bkv)
 
     kv_len = skv if kv_len is None else kv_len
-    if mode == "onepass":
+    if mode == "decode":
+        out = ita_attention_decode(
+            qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
+            causal=causal, window=window, adaptive=adaptive,
+            block_kv=bkv, kv_rep=rep,
+            hq=hq if kv_layout == "bsgd" else None, interpret=interpret)
+    elif mode == "onepass":
         out = ita_attention_onepass(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
             causal=causal, window=window, adaptive=adaptive, block_q=bq,
-            block_kv=bkv, interpret=interpret)
+            block_kv=bkv, kv_rep=rep, interpret=interpret)
     else:
         out, _ = ita_attention_twopass(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
             causal=causal, window=window, adaptive=adaptive, block_q=bq,
-            block_kv=bkv, interpret=interpret)
+            block_kv=bkv, kv_rep=rep, interpret=interpret)
     return out[:, :sq].reshape(b, hq, sq, d)

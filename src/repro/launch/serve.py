@@ -3,15 +3,15 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --attention-impl ita --batch 4 --prompt-len 32 --gen 16
 
-Demonstrates the production serving loop: quantized (int8) KV caches,
-integer streaming-softmax attention at prefill, direct integer attention
-at decode, continuous batch of requests.
+Demonstrates the production serving loop via ``repro.runtime.generate``:
+quantized (int8) KV ring buffers (``repro.runtime.kv_cache``), integer
+streaming-softmax attention at prefill, incremental integer attention at
+decode, continuous batch of requests.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +19,8 @@ import jax.numpy as jnp
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch.hints import use_hints
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import init_caches, init_model
+from repro.models import init_model
+from repro.runtime.generate import generate
 
 
 def main():
@@ -32,6 +32,7 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,11 +43,6 @@ def main():
 
     with mesh, use_hints(mesh):
         params = init_model(key, cfg)
-        prefill = jax.jit(make_prefill_step(cfg))
-        decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
-
-        max_len = args.prompt_len + args.gen
-        caches = init_caches(cfg, args.batch, max_len=max_len)
         prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                      cfg.vocab_size)
         frontend = None
@@ -54,32 +50,16 @@ def main():
             frontend = jax.random.normal(
                 key, (args.batch, cfg.n_frontend_tokens, cfg.frontend_dim),
                 jnp.float32)
+        key, sample_key = jax.random.split(key)
+        res = generate(params, cfg, prompts, args.gen, frontend=frontend,
+                       temperature=args.temperature, key=sample_key)
 
-        t0 = time.time()
-        logits, caches = prefill(params, prompts, caches, frontend)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        jax.block_until_ready(tok)
-        t_prefill = time.time() - t0
-
-        out_tokens = [tok]
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            logits, caches = decode(params, tok, caches,
-                                    jnp.asarray(args.prompt_len + i),
-                                    frontend)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out_tokens.append(tok)
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
     print(f"[serve] arch={cfg.name} impl={cfg.attention_impl}")
     print(f"[serve] prefill {args.batch}x{args.prompt_len} tokens in "
-          f"{t_prefill*1e3:.1f} ms")
-    print(f"[serve] decoded {args.gen - 1} steps x{args.batch} in "
-          f"{t_decode*1e3:.1f} ms "
-          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
-    print("[serve] sample:", gen[0, :12].tolist())
+          f"{res.prefill_s*1e3:.1f} ms")
+    print(f"[serve] decoded {res.decode_steps} steps x{args.batch} in "
+          f"{res.decode_s*1e3:.1f} ms ({res.decode_tok_s:.1f} tok/s)")
+    print("[serve] sample:", res.tokens[0, :12].tolist())
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ from repro.core import softmax as S
 from repro.core.quant import EPS_MAX, INT8_MAX, INT8_MIN
 from repro.launch import hints
 from repro.models.layers import _normal, rope, softcap
+from repro.runtime import kv_cache as KV
 
 
 def init_attention(key, cfg, cross: bool = False):
@@ -47,7 +48,9 @@ def init_attention(key, cfg, cross: bool = False):
     if cfg.attention_impl != "float":
         # Calibrated quantization scales (QAT-trainable), one per tensor
         # role — the clipping thresholds the paper learns with QAT.
-        for name in ("s_q", "s_k", "s_v"):
+        # s_out requantizes the attention output onto an int8 grid between
+        # blocks (the fused decode kernel's out_mult = s_v / s_out).
+        for name in ("s_q", "s_k", "s_v", "s_out"):
             p[name] = jnp.asarray(0.05, jnp.float32)
     return p
 
@@ -86,8 +89,7 @@ def _gqa_out(p, v):
 
 
 def _quantize_dyn(x, scale):
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), INT8_MIN, INT8_MAX)
-    return q.astype(jnp.int8)
+    return KV.quantize_with_scale(x, scale)
 
 
 def attention_core(q, k, v, *, cfg, params, causal, window, q_offset=0,
@@ -123,6 +125,10 @@ def attention_core(q, k, v, *, cfg, params, causal, window, q_offset=0,
                     q, k, fake_quant(v, s_v), impl="ita_ste", cfg=cfg,
                     scale=scale, s_q=s_q, s_k=s_k, s_v=s_v, causal=causal,
                     window=window, kv_len=kv_len, **ck)
+                if "s_out" in params:
+                    # QAT sees the serve-time inter-block output requant,
+                    # training the s_out grid the decode kernel deploys on
+                    out = fake_quant(out, params["s_out"])
             else:
                 q8 = _quantize_dyn(q, s_q)
                 k8 = k_quant if k_quant is not None else _quantize_dyn(k, s_k)
@@ -155,12 +161,34 @@ def attention_core(q, k, v, *, cfg, params, causal, window, q_offset=0,
         logits = softcap(logits, cfg.attn_softcap)
         p = S.ita_softmax_ste(logits.astype(jnp.float32),
                               mask=jnp.broadcast_to(mask, logits.shape))
-        return _gqa_out(p.astype(v.dtype), vf)
+        out = _gqa_out(p.astype(v.dtype), vf)
+        if "s_out" in params:
+            out = fake_quant(out, params["s_out"])
+        return out
 
     # --- integer serve path (direct: decode / ibert) -------------------
     q8 = _quantize_dyn(q, s_q)
     k8 = k_quant if k_quant is not None else _quantize_dyn(k, s_k)
     v8 = v_quant if v_quant is not None else _quantize_dyn(v, s_v)
+
+    # Single-token decode rides the fused decode-shaped Pallas kernel,
+    # consuming the int8 ring buffers cache-natively (kv_layout="bsgd")
+    # and requantizing the output onto the s_out grid. Falls back to the
+    # XLA path for softcap / custom query scale (kernel-unsupported) or
+    # legacy param sets without s_out.
+    if (impl == "ita" and mode == "decode" and sq_ <= 8
+            and not cfg.attn_softcap and not cfg.query_scale
+            and "s_out" in params):
+        from repro.kernels.ita_attention.ops import ita_attention
+        s_o = params["s_out"]
+        out_i8 = ita_attention(
+            jnp.swapaxes(q8, 1, 2), k8, v8, s_q, s_k, s_v, s_o,
+            q_offset=q_offset, kv_len=kv_len, causal=causal, window=window,
+            mode="decode", adaptive=cfg.softmax_impl != "ita_paper",
+            kv_layout="bsgd")
+        out = jnp.swapaxes(out_i8, 1, 2).astype(jnp.float32) * s_o
+        return out.astype(cfg.compute_dtype())
+
     acc = _gqa_logits(q8.astype(jnp.int32), k8.astype(jnp.int32))   # int32
     logits_f = acc.astype(jnp.float32) * (s_q * s_k * scale)
     logits_f = softcap(logits_f, cfg.attn_softcap)
@@ -257,34 +285,17 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
         # tail (token t lives at slot t % cache_size) so decode can append.
         y = attention_core(q, k, v, cfg=cfg, params=params, causal=causal,
                            window=window, mode=mode)
-        s = k.shape[1]
-        cs = cache["k"].shape[1]
-        tail_k, tail_v = _q(k, "s_k"), _q(v, "s_v")
-        if s >= cs:
-            tail_k = jnp.roll(tail_k[:, s - cs:], s % cs, axis=1)
-            tail_v = jnp.roll(tail_v[:, s - cs:], s % cs, axis=1)
-            kc, vc = tail_k, tail_v
-        else:
-            kc = jax.lax.dynamic_update_slice(cache["k"], tail_k, (0, 0, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache["v"], tail_v, (0, 0, 0, 0))
-        new_cache = {"k": kc, "v": vc, "pos": jnp.asarray(s, jnp.int32)}
+        new_cache = KV.prefill_write(cache, _q(k, "s_k"), _q(v, "s_v"))
     else:                                           # decode append
-        pos = cache["pos"]
         s_new = q.shape[1]
-        cs = cache["k"].shape[1]
-        slot = pos % cs                              # ring buffer (windowed)
-        kc = jax.lax.dynamic_update_slice(cache["k"], _q(k, "s_k"),
-                                          (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(cache["v"], _q(v, "s_v"),
-                                          (0, slot, 0, 0))
-        new_cache = {"k": kc, "v": vc, "pos": pos + s_new}
-        kv_len = jnp.minimum(pos + s_new, cs)
-        q_offset = jnp.minimum(pos, jnp.maximum(cs - s_new, 0))
+        new_cache = KV.decode_append(cache, _q(k, "s_k"), _q(v, "s_v"))
+        kc, vc = new_cache["k"], new_cache["v"]
         kw = dict(k_quant=kc, v_quant=vc) if quant_cache else {}
         y = attention_core(q, None if quant_cache else kc,
                            None if quant_cache else vc, cfg=cfg,
                            params=params, causal=causal, window=window,
-                           q_offset=q_offset, kv_len=kv_len, mode=mode, **kw)
+                           q_offset=KV.q_offset(new_cache, s_new),
+                           kv_len=KV.valid_len(new_cache), mode=mode, **kw)
 
     y = y.reshape(*y.shape[:-2], h * hd) @ params["wo"].astype(dt)
     y = hints.constrain(y, "batch", "seq", None)

@@ -79,8 +79,10 @@ def adamw_update(grads, opt_state: OptState, params, cfg: AdamWConfig):
         mhat = m / b1c
         vhat = v / b2c
         base = w32 if w32 is not None else p.astype(jnp.float32)
-        step = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
-                     + cfg.weight_decay * base)
+        # no decay on scalar leaves (quant scales, gates): decaying a
+        # calibrated scale toward 0 corrupts the integer serve path
+        wd = cfg.weight_decay if p.ndim > 0 else 0.0
+        step = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + wd * base)
         new32 = base - step
         return new32.astype(p.dtype), m, v, new32
 

@@ -1,0 +1,102 @@
+"""Batched autoregressive generation: quantized prefill → incremental
+decode through the int8 KV caches.
+
+The serving loop the launchers and examples share: one jitted prefill over
+the whole prompt batch (streaming ITA attention, caches written once),
+then one jitted single-token decode step per generated position (direct
+integer attention against the ring buffers — no full-context recompute,
+the data-movement win ITA's streaming softmax exists for).
+
+    from repro.runtime.generate import generate
+    res = generate(params, cfg, prompts, gen=32)
+    res.tokens          # (B, gen) int32
+    res.decode_tok_s    # decode throughput
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=32)
+def _steps(cfg):
+    """Jitted prefill/decode steps, cached per (hashable, frozen) config so
+    repeated generate() calls reuse compilations."""
+    from repro.launch.steps import make_decode_step, make_prefill_step
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+    return prefill, decode
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: jax.Array            # (B, gen) generated token ids
+    prefill_s: float             # wall-clock of the prefill step
+    decode_s: float              # wall-clock of all decode steps
+    decode_steps: int
+
+    @property
+    def decode_tok_s(self) -> float:
+        n = self.decode_steps * self.tokens.shape[0]
+        return n / max(self.decode_s, 1e-9)
+
+
+def _select(logits, temperature, key):
+    """Greedy (temperature 0) or temperature sampling of the next token."""
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    tok = jax.random.categorical(key, logits / temperature, axis=-1)
+    return tok.astype(jnp.int32)
+
+
+def generate(params, cfg, prompts, gen: int, *, frontend=None,
+             temperature: float = 0.0, key=None, max_len: int | None = None,
+             caches=None) -> GenerateResult:
+    """Prefill the prompt batch, then decode ``gen`` tokens incrementally.
+
+    ``prompts`` (B, S) int32. ``max_len`` sizes the KV ring buffers
+    (default S + gen; smaller values window-evict). Pass ``caches`` to
+    reuse pre-allocated buffers across calls.
+    """
+    from repro.models import init_caches
+
+    b, prompt_len = prompts.shape
+    if gen <= 0:
+        return GenerateResult(tokens=jnp.zeros((b, 0), jnp.int32),
+                              prefill_s=0.0, decode_s=0.0, decode_steps=0)
+    max_len = max_len or prompt_len + gen
+    prefill, decode = _steps(cfg)
+    if caches is None:
+        caches = init_caches(cfg, b, max_len=max_len)
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, prompts, caches, frontend)
+    if key is not None:
+        key, sub = jax.random.split(key)
+    else:
+        sub = None
+    tok = _select(logits, temperature, sub)
+    jax.block_until_ready(tok)
+    t_prefill = time.perf_counter() - t0
+
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(gen - 1):
+        logits, caches = decode(params, tok, caches,
+                                jnp.asarray(prompt_len + i, jnp.int32),
+                                frontend)
+        if key is not None:
+            key, sub = jax.random.split(key)
+        tok = _select(logits, temperature, sub)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+    return GenerateResult(tokens=jnp.concatenate(out, axis=1),
+                          prefill_s=t_prefill, decode_s=t_decode,
+                          decode_steps=gen - 1)

@@ -1,0 +1,179 @@
+"""Int8 KV-cache ring buffers for autoregressive decode.
+
+The serving-side companion to the ITA kernels: K/V projections are stored
+quantized (int8 + quantization scales), so the cache is 4x smaller than
+f32 and feeds the integer attention path directly — no dequantize pass,
+the int8 MXU consumes the cache bytes as stored (paper §III's
+weight-stationary philosophy applied to the KV stream).
+
+A cache is a plain dict pytree (scan/shard/donate friendly):
+
+    {"k": (B, C, G, hd) int8,   "v": (B, C, G, hd) int8,
+     "pos": () int32            # total tokens ever written
+     [, "k_scale": (G,) f32, "v_scale": (G,) f32]}   # per-head scales
+
+``C`` (capacity) is a ring: token ``t`` lives in slot ``t % C``.  For
+global attention ``C >= max_len`` and the ring never wraps; for sliding-
+window layers ``C = window`` and old tokens are evicted by overwrite.
+``pos`` tracks the *logical* stream length, from which the valid prefix
+(``kv_len``) and the logical position of new queries (``q_offset``) are
+derived — the plumbing ``ita_attention`` needs for decode.
+
+Per-head scales: per (kv-)head symmetric quantization of the cached K/V
+(finer than the per-tensor QAT scale; the decode engine in
+``repro.runtime.generate`` and ``benchmarks/bench_decode.py`` use it).
+The model path (``repro.models.attention``) passes the QAT per-tensor
+scales instead, so train/serve semantics stay aligned.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import INT8_MAX, INT8_MIN
+
+
+def quantize_per_head(x: jax.Array, head_axis: int = 2):
+    """Symmetric per-head int8 quantization.
+
+    ``x`` (..., G, hd) float with heads on ``head_axis``. Returns
+    ``(x_q int8, scale (G,) f32)``.
+    """
+    red = tuple(i for i in range(x.ndim) if i != head_axis)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=red)
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    sh = [1] * x.ndim
+    sh[head_axis] = x.shape[head_axis]
+    q = jnp.round(x.astype(jnp.float32) / scale.reshape(sh))
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8), scale
+
+
+def quantize_with_scale(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize onto a fixed (per-tensor or broadcastable) scale."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def init_cache(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
+               dtype=jnp.int8, per_head_scales: bool = False) -> dict:
+    """Fresh (zeroed) ring-buffer cache."""
+    capacity = max(capacity, 1)
+    cache = {
+        "k": jnp.zeros((batch, capacity, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, n_kv_heads, head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if per_head_scales:
+        cache["k_scale"] = jnp.ones((n_kv_heads,), jnp.float32)
+        cache["v_scale"] = jnp.ones((n_kv_heads,), jnp.float32)
+    return cache
+
+
+def capacity(cache: dict) -> int:
+    return cache["k"].shape[1]
+
+
+def valid_len(cache: dict) -> jax.Array:
+    """Number of valid (non-evicted) entries in the ring."""
+    return jnp.minimum(cache["pos"], capacity(cache))
+
+
+def q_offset(cache: dict, s_new: int = 1) -> jax.Array:
+    """Logical position of the first of the ``s_new`` query tokens *just
+    appended* to the cache, in ring coordinates: ``valid_len - s_new``.
+    While the ring has not wrapped this is the token's stream position;
+    after wrap the oldest surviving token is redefined as position 0, so
+    the newest query sits at ``C - s_new`` and the sliding-window mask
+    ``(qi - kj) < window`` keeps exactly the last ``window`` slots visible.
+    """
+    return jnp.maximum(valid_len(cache) - s_new, 0)
+
+
+def prefill_write(cache: dict, k_q: jax.Array, v_q: jax.Array) -> dict:
+    """Bulk-write ``S`` prefill tokens, evicting beyond capacity.
+
+    ``k_q``/``v_q`` (B, S, G, hd), already quantized. Token ``t`` lands in
+    slot ``t % C`` (so a later ``decode_append`` continues the same ring);
+    when ``S >= C`` only the last ``C`` tokens survive.
+    """
+    s = k_q.shape[1]
+    cs = capacity(cache)
+    if s >= cs:
+        # keep the tail, rolled so slot (t % C) holds token t
+        k_t = jnp.roll(k_q[:, s - cs:], s % cs, axis=1)
+        v_t = jnp.roll(v_q[:, s - cs:], s % cs, axis=1)
+    else:
+        k_t = jax.lax.dynamic_update_slice(cache["k"], k_q, (0, 0, 0, 0))
+        v_t = jax.lax.dynamic_update_slice(cache["v"], v_q, (0, 0, 0, 0))
+    return dict(cache, k=k_t, v=v_t, pos=jnp.asarray(s, jnp.int32))
+
+
+def decode_append(cache: dict, k_q: jax.Array, v_q: jax.Array) -> dict:
+    """Append ``s_new`` decode tokens, token ``pos + i`` to slot
+    ``(pos + i) % C``. Written per token because a blockwise
+    ``dynamic_update_slice`` would *clamp* at the ring boundary instead of
+    wrapping (silently overwriting the newest surviving entries);
+    ``s_new`` is 1 in steady-state decode, ≤ 8 for speculative bursts.
+    """
+    cs = capacity(cache)
+    k_t, v_t = cache["k"], cache["v"]
+    for i in range(k_q.shape[1]):
+        slot = (cache["pos"] + i) % cs
+        k_t = jax.lax.dynamic_update_slice(k_t, k_q[:, i:i + 1],
+                                           (0, slot, 0, 0))
+        v_t = jax.lax.dynamic_update_slice(v_t, v_q[:, i:i + 1],
+                                           (0, slot, 0, 0))
+    return dict(cache, k=k_t, v=v_t, pos=cache["pos"] + k_q.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level decode engine (one attention layer over one cache)
+# ---------------------------------------------------------------------------
+
+def prefill_attend(cache: dict, q_q: jax.Array, k_new: jax.Array,
+                   v_new: jax.Array, s_q, s_out, *, causal: bool = True,
+                   window: int = 0, block_q: int = 128, block_kv: int = 128,
+                   interpret: bool = True):
+    """Quantized prefill: per-head-quantize and cache K/V, run the fused
+    ITA kernel over the prompt. ``q_q`` (B, Hq, S, D) int8 at scale
+    ``s_q``; ``k_new``/``v_new`` (B, S, G, D) float. Returns
+    ``(out int8 at s_out, new_cache)``."""
+    from repro.kernels.ita_attention.ops import ita_attention
+    k_q, k_scale = quantize_per_head(k_new)
+    v_q, v_scale = quantize_per_head(v_new)
+    cache = prefill_write(cache, k_q, v_q)
+    cache = dict(cache, k_scale=k_scale, v_scale=v_scale)
+    out = ita_attention(q_q, k_q.transpose(0, 2, 1, 3),
+                        v_q.transpose(0, 2, 1, 3), s_q, k_scale, v_scale,
+                        s_out, causal=causal, window=window, mode="onepass",
+                        block_q=block_q, block_kv=block_kv,
+                        interpret=interpret)
+    return out, cache
+
+
+def decode_attend(cache: dict, q_q: jax.Array, k_new: jax.Array,
+                  v_new: jax.Array, s_q, s_out, *, causal: bool = True,
+                  window: int = 0, block_kv: int = 128,
+                  interpret: bool = True):
+    """One incremental decode step through the cache.
+
+    Appends the new token's K/V (quantized onto the cache's standing
+    per-head scales — the scales are frozen after prefill so cached bytes
+    never need rescaling) and attends the single query over the valid
+    prefix via the fused decode-shaped kernel. ``q_q`` (B, Hq, 1, D) int8;
+    ``k_new``/``v_new`` (B, 1, G, D) float. Returns ``(out, new_cache)``.
+    """
+    from repro.kernels.ita_attention.ops import ita_attention
+    k_q = quantize_with_scale(k_new, cache["k_scale"][None, None, :, None])
+    v_q = quantize_with_scale(v_new, cache["v_scale"][None, None, :, None])
+    cache = decode_append(cache, k_q, v_q)
+    # cache-native kv_layout: the ring buffers are consumed in place by
+    # the decode kernel's index maps — no per-step transpose/broadcast
+    out = ita_attention(q_q, cache["k"], cache["v"], s_q,
+                        cache["k_scale"], cache["v_scale"], s_out,
+                        q_offset=q_offset(cache, 1), kv_len=valid_len(cache),
+                        causal=causal, window=window, mode="decode",
+                        kv_layout="bsgd", block_kv=block_kv,
+                        interpret=interpret)
+    return out, cache

@@ -1,5 +1,33 @@
+import os
+import pathlib
+
 import numpy as np
 import pytest
+
+# Suite wall-clock is dominated by XLA compiles (~1-3 s each across ~90
+# tests). Persist compiled executables across runs — first run pays full
+# compile cost, repeat tier-1 runs are several times faster. Must be set
+# before any test module imports jax.
+os.environ.setdefault(
+    "JAX_COMPILATION_CACHE_DIR",
+    str(pathlib.Path(__file__).resolve().parent.parent / ".jax_cache"))
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0.3")
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "0")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked slow (big shapes, full arch sweep)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow case — enable with --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
 
 
 @pytest.fixture

@@ -1,0 +1,201 @@
+"""Int8 KV-cache decode engine: parity + ring-buffer semantics.
+
+The acceptance property: token-by-token decode through the int8 ring
+buffer (``repro.runtime.kv_cache`` + the decode-shaped Pallas kernel) is
+**bit-identical** to the matching rows of one-shot prefill
+``ita_attention`` — causal, sliding-window and GQA — because the decode
+kernel replays the exact streaming-DA tile schedule of the onepass kernel
+over the same block boundaries.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ita_attention.ops import ita_attention
+from repro.runtime import kv_cache as KV
+
+rng = np.random.default_rng(0)
+
+S, PREFILL, BKV = 128, 96, 64
+S_Q, S_OUT = np.float32(0.05), np.float32(0.02)
+
+
+def _i8(*shape):
+    return rng.integers(-128, 128, shape, dtype=np.int8)
+
+
+@pytest.mark.parametrize("hq,hkv,causal,window", [
+    (4, 4, True, 0),        # MHA causal
+    (4, 2, True, 0),        # GQA
+    (4, 2, True, 48),       # GQA + sliding window (crosses tile boundary)
+])
+def test_decode_bit_identical_to_oneshot_prefill(hq, hkv, causal, window):
+    b, d = 2, 32
+    q = _i8(b, hq, S, d)
+    k = _i8(b, hkv, S, d)          # (B, H, S, D) kernel layout
+    v = _i8(b, hkv, S, d)
+    sk = rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32)
+    sv = rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32)
+
+    full = np.asarray(ita_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), S_Q,
+        jnp.asarray(sk), jnp.asarray(sv), S_OUT, causal=causal,
+        window=window, mode="onepass", block_q=32, block_kv=BKV))
+
+    # ring cache in (B, S, G, hd) layout, sized to the full sequence
+    cache = KV.init_cache(b, S, hkv, d, per_head_scales=True)
+    cache = dict(cache, k_scale=jnp.asarray(sk), v_scale=jnp.asarray(sv))
+    cache = KV.prefill_write(cache, jnp.asarray(k[:, :, :PREFILL].transpose(0, 2, 1, 3)),
+                             jnp.asarray(v[:, :, :PREFILL].transpose(0, 2, 1, 3)))
+
+    for t in range(PREFILL, S):
+        cache = KV.decode_append(
+            cache, jnp.asarray(k[:, :, t:t + 1].transpose(0, 2, 1, 3)),
+            jnp.asarray(v[:, :, t:t + 1].transpose(0, 2, 1, 3)))
+        out = ita_attention(
+            jnp.asarray(q[:, :, t:t + 1]), cache["k"].transpose(0, 2, 1, 3),
+            cache["v"].transpose(0, 2, 1, 3), S_Q, cache["k_scale"],
+            cache["v_scale"], S_OUT, q_offset=KV.q_offset(cache, 1),
+            kv_len=KV.valid_len(cache), causal=causal, window=window,
+            mode="decode", block_kv=BKV)
+        np.testing.assert_array_equal(np.asarray(out)[:, :, 0],
+                                      full[:, :, t],
+                                      err_msg=f"decode step t={t}")
+
+
+def test_decode_attend_engine_matches_oneshot():
+    """The float-in/int8-out engine path (per-head quantization inside
+    ``prefill_attend``/``decode_attend``) is bit-identical to one-shot
+    attention over the same quantized tensors and scales."""
+    b, hq, hkv, d = 1, 4, 2, 32
+    qf = rng.normal(0, 1, (b, hq, S, d)).astype(np.float32)
+    kf = rng.normal(0, 1, (b, S, hkv, d)).astype(np.float32)
+    vf = rng.normal(0, 1, (b, S, hkv, d)).astype(np.float32)
+    q8 = KV.quantize_with_scale(jnp.asarray(qf), S_Q)
+
+    cache = KV.init_cache(b, S, hkv, d, per_head_scales=True)
+    _, cache = KV.prefill_attend(cache, q8[:, :, :PREFILL],
+                                 jnp.asarray(kf[:, :PREFILL]),
+                                 jnp.asarray(vf[:, :PREFILL]), S_Q, S_OUT,
+                                 block_q=32, block_kv=BKV)
+    outs = []
+    for t in range(PREFILL, S):
+        out, cache = KV.decode_attend(cache, q8[:, :, t:t + 1],
+                                      jnp.asarray(kf[:, t:t + 1]),
+                                      jnp.asarray(vf[:, t:t + 1]),
+                                      S_Q, S_OUT, block_kv=BKV)
+        outs.append(np.asarray(out)[:, :, 0])
+
+    # one-shot over the cache's own int8 contents + frozen scales
+    full = np.asarray(ita_attention(
+        q8, cache["k"].transpose(0, 2, 1, 3),
+        cache["v"].transpose(0, 2, 1, 3), S_Q, cache["k_scale"],
+        cache["v_scale"], S_OUT, causal=True, mode="onepass",
+        block_q=32, block_kv=BKV))
+    np.testing.assert_array_equal(np.stack(outs, axis=2),
+                                  full[:, :, PREFILL:])
+
+
+def test_decode_mode_matches_onepass_same_call():
+    """mode='decode' ≡ mode='onepass' for a single query at any prefix."""
+    b, h, d, cap = 2, 4, 32, 128
+    q = _i8(b, h, 1, d)
+    k, v = _i8(b, h, cap, d), _i8(b, h, cap, d)
+    for kv_len in (1, 63, 64, 65, 128):
+        args = (jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                S_Q, S_Q, S_Q, S_OUT)
+        kw = dict(q_offset=kv_len - 1, kv_len=kv_len, causal=True,
+                  block_kv=64)
+        a = ita_attention(*args, mode="decode", **kw)
+        b_ = ita_attention(*args, mode="onepass", block_q=8, **kw)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_ring_buffer_eviction_and_tracking():
+    """Slot layout, pos/valid_len/q_offset across prefill + wrap-around."""
+    b, g, hd, cap = 1, 2, 4, 16
+    toks = _i8(b, 24, g, hd)
+
+    cache = KV.init_cache(b, cap, g, hd)
+    cache = KV.prefill_write(cache, jnp.asarray(toks[:, :12]),
+                             jnp.asarray(toks[:, :12]))
+    assert int(cache["pos"]) == 12
+    assert int(KV.valid_len(cache)) == 12
+    assert int(KV.q_offset(cache, 1)) == 11
+    np.testing.assert_array_equal(np.asarray(cache["k"][:, :12]),
+                                  toks[:, :12])
+
+    for t in range(12, 24):
+        cache = KV.decode_append(cache, jnp.asarray(toks[:, t:t + 1]),
+                                 jnp.asarray(toks[:, t:t + 1]))
+    assert int(cache["pos"]) == 24
+    assert int(KV.valid_len(cache)) == cap
+    assert int(KV.q_offset(cache, 1)) == cap - 1
+    # token t lives in slot t % cap; tokens 8..23 survive
+    for t in range(8, 24):
+        np.testing.assert_array_equal(np.asarray(cache["k"][:, t % cap]),
+                                      toks[:, t])
+
+    # long prefill (> capacity) keeps only the tail, same slot rule
+    cache2 = KV.prefill_write(KV.init_cache(b, cap, g, hd),
+                              jnp.asarray(toks), jnp.asarray(toks))
+    assert int(cache2["pos"]) == 24
+    for t in range(8, 24):
+        np.testing.assert_array_equal(np.asarray(cache2["k"][:, t % cap]),
+                                      toks[:, t])
+
+
+def test_multi_token_append_wraps_ring_boundary():
+    """A burst append straddling the ring boundary must wrap to slot 0,
+    not clamp (dynamic_update_slice clamps; the append is per-token)."""
+    b, g, hd, cap = 1, 2, 4, 16
+    toks = _i8(b, 19, g, hd)
+    cache = KV.prefill_write(KV.init_cache(b, cap, g, hd),
+                             jnp.asarray(toks[:, :15]),
+                             jnp.asarray(toks[:, :15]))
+    # 4-token burst from pos=15: slots 15, 0, 1, 2
+    cache = KV.decode_append(cache, jnp.asarray(toks[:, 15:19]),
+                             jnp.asarray(toks[:, 15:19]))
+    assert int(cache["pos"]) == 19
+    for t in range(3, 19):          # tokens 3..18 survive
+        np.testing.assert_array_equal(np.asarray(cache["k"][:, t % cap]),
+                                      toks[:, t], err_msg=f"token {t}")
+
+
+def test_per_head_quantization_roundtrip():
+    x = rng.normal(0, 1, (2, 8, 4, 16)).astype(np.float32) \
+        * np.array([0.1, 1.0, 3.0, 10.0], np.float32)[None, None, :, None]
+    q, scale = KV.quantize_per_head(jnp.asarray(x))
+    assert q.dtype == jnp.int8 and scale.shape == (4,)
+    err = np.abs(np.asarray(q) * np.asarray(scale)[None, None, :, None] - x)
+    assert float(err.max()) <= float(np.asarray(scale).max()) / 2 + 1e-6
+
+
+def test_generate_loop_smoke():
+    """End-to-end generate(): quantized prefill + incremental decode."""
+    from repro.configs.base import ModelConfig
+    from repro.models import init_model
+    from repro.runtime.generate import generate
+
+    cfg = ModelConfig(name="gen-smoke", family="dense", d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128, layer_groups=((("attn",), 2),),
+                      dtype="float32", attention_impl="ita")
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+
+    res = generate(params, cfg, prompts, gen=6, max_len=18)
+    assert res.tokens.shape == (2, 6)
+    assert res.tokens.dtype == jnp.int32
+    assert bool(jnp.all((res.tokens >= 0) & (res.tokens < cfg.vocab_size)))
+    assert res.decode_steps == 5 and res.decode_tok_s > 0
+
+    # sampling path: same prompts, nonzero temperature, still valid ids;
+    # same max_len so the cached jitted steps are reused (no recompile)
+    res_t = generate(params, cfg, prompts, gen=4, temperature=1.0, key=key,
+                     max_len=18)
+    assert res_t.tokens.shape == (2, 4)
+    assert bool(jnp.all((res_t.tokens >= 0) & (res_t.tokens < cfg.vocab_size)))

@@ -26,8 +26,8 @@ def _setup(tmp, arch="phi3-mini-3.8b", steps_cfg=None):
     cfg = get_config(arch, smoke=True)
     mesh = make_host_mesh()
     params = init_model(KEY, cfg)
-    opt_cfg = steps_cfg or AdamWConfig(lr=1e-3, total_steps=100,
-                                       warmup_steps=5)
+    opt_cfg = steps_cfg or AdamWConfig(lr=1e-2, total_steps=100,
+                                       warmup_steps=2)
     opt_state = init_opt_state(params)
     step = jax.jit(make_train_step(cfg, opt_cfg))
     pipe = DataPipeline(SyntheticSource(cfg.vocab_size), batch=2,
@@ -42,10 +42,14 @@ def test_training_reduces_loss(tmp_path):
         batch = pipe.next()
         params, opt_state, m = step(params, opt_state, batch)
         losses.append(float(m["loss"]))
-    assert losses[-1] < losses[0]
+    # synthetic random tokens -> per-batch loss is noisy; the model can
+    # still learn the (uniform) marginal, so compare window means, not
+    # endpoints (endpoint compare was flaky at the seed).
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.05, losses
     assert np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_bitwise_identical(tmp_path):
     """6 straight steps == 3 steps + checkpoint + restore + 3 steps."""
     def run(n, ckdir, restore=False):
@@ -66,6 +70,7 @@ def test_checkpoint_resume_bitwise_identical(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_failure_injection_and_restart(tmp_path):
     cfg, mesh, params, opt_state, step, pipe = _setup(tmp_path)
     ft = FTConfig(ckpt_dir=str(tmp_path / "ck2"), ckpt_every=2,
@@ -131,6 +136,19 @@ def test_adamw_math():
     # first step: mhat = g, vhat = g^2 -> step ~= lr * sign(g)
     np.testing.assert_allclose(np.asarray(new_p["w"]),
                                [1.0 - 0.1, -2.0 - 0.1], atol=1e-3)
+
+
+def test_adamw_no_decay_on_scalar_scales():
+    """Quant scales / gates (0-d leaves) get zero grad by design
+    (calibration-updated); weight decay must not silently shrink them."""
+    params = {"w": jnp.ones((2,)), "s_out": jnp.asarray(0.05)}
+    grads = {"w": jnp.ones((2,)), "s_out": jnp.zeros(())}
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=10,
+                      weight_decay=0.5, clip_norm=1e9)
+    st = init_opt_state(params)
+    new_p, st, _ = adamw_update(grads, st, params, cfg)
+    assert float(new_p["s_out"]) == float(np.float32(0.05))   # no decay
+    assert float(new_p["w"][0]) < 1.0             # vector still decays
 
 
 def test_grad_clipping():

@@ -1,0 +1,93 @@
+"""Golden-vector regression for the bit-exact ITA softmax.
+
+Checked-in int8 inputs → expected *integer* probabilities (units of
+2^-8), locking in the paper's eq. 4/5 semantics with the 15-bit Σ /
+16-bit Σ_inv silicon widths:
+
+    k_i   = (max - x_i) >> 5
+    Σ     = sat15( Σ_i 256 >> k_i )     (DA; multi-part adds the
+                                         Σ >>= Δmax>>5 correction)
+    Σ_inv = sat16( 2^16 // Σ )          (DI)
+    p_i   = Σ_inv >> k_i                (EN)
+
+Any change to these bit patterns is a silicon-semantics break, not a
+refactor — the vectors below must never be regenerated to make a failing
+test pass. Row 0 of the 4-part output intentionally differs from the
+one-shot output (a late running-max update re-floors already-accumulated
+Σ terms): that documented divergence is part of the contract.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import softmax as S
+
+# 4 rows x 32 int8 logits (seeded normal / EPS_MAX, clipped)
+X = np.array([
+    [-35, -51, -22, -76, 35, -12, -81, -56, 17, 46, 111, 127, 23, -55,
+     -118, 15, -45, -23, -34, -8, 59, 9, -9, -57, -93, -27, -3, 98, 7,
+     54, -28, -66],
+    [-53, -40, 118, -46, 46, -50, 52, 21, -9, -2, -36, 25, -25, -68,
+     -71, 10, 87, 9, -7, 16, 72, 12, -23, 61, 24, 85, 10, -68, -76, 91,
+     95, -10],
+    [-21, 81, -61, -50, 36, -22, 0, -9, 19, 78, 5, 36, -114, -3, -47,
+     -68, -49, -19, 51, -73, 2, -27, -18, 56, 30, 74, -9, -39, -12, 13,
+     10, -60],
+    [5, 13, 127, 104, -47, -16, -81, -33, 17, 67, -40, -36, -119, -9,
+     -59, -29, -49, -5, -97, -81, 118, -71, -61, 102, 127, -65, -20, 19,
+     96, -55, -14, 43]], np.int8)
+
+# one-shot (num_parts=1) integer probabilities
+P_ONESHOT = np.array([
+    [1, 1, 2, 0, 11, 2, 0, 1, 5, 11, 47, 47, 5, 1, 0, 5, 1, 2, 1, 2, 11,
+     5, 2, 1, 0, 2, 2, 47, 5, 11, 2, 0],
+    [0, 1, 31, 0, 7, 0, 7, 3, 3, 3, 1, 7, 1, 0, 0, 3, 31, 3, 3, 3, 15,
+     3, 1, 15, 7, 15, 3, 0, 0, 31, 31, 1],
+    [3, 24, 1, 1, 12, 3, 6, 6, 12, 24, 6, 12, 0, 6, 1, 1, 1, 3, 24, 1,
+     6, 3, 3, 24, 12, 24, 6, 3, 6, 6, 6, 1],
+    [4, 4, 32, 32, 1, 2, 0, 1, 4, 16, 1, 1, 0, 2, 1, 2, 1, 2, 0, 0, 32,
+     0, 1, 32, 32, 0, 2, 4, 32, 1, 2, 8]], np.int64)
+
+# streamed over 4 parts of 8: row 0 takes a late max update
+P_STREAM4 = P_ONESHOT.copy()
+P_STREAM4[0] = [1, 1, 2, 0, 11, 2, 0, 1, 5, 11, 45, 45, 5, 1, 0, 5, 1,
+                2, 1, 2, 11, 5, 2, 1, 0, 2, 2, 45, 5, 11, 2, 0]
+
+SIGMA = np.array([1386, 2084, 2676, 2036], np.int64)   # one-shot Σ (wide)
+ROW_MAX = np.array([127, 118, 81, 127], np.int64)
+
+
+def _int_probs(p_float):
+    p = np.asarray(p_float) * 256.0
+    pi = np.rint(p).astype(np.int64)
+    np.testing.assert_allclose(p, pi, atol=1e-6)   # exact multiples of 2^-8
+    return pi
+
+
+def test_bitexact_oneshot_golden():
+    pi = _int_probs(S.ita_softmax_bitexact(jnp.asarray(X), num_parts=1))
+    np.testing.assert_array_equal(pi, P_ONESHOT)
+
+
+def test_bitexact_streaming_golden():
+    pi = _int_probs(S.ita_softmax_bitexact(jnp.asarray(X), num_parts=4))
+    np.testing.assert_array_equal(pi, P_STREAM4)
+
+
+def test_oneshot_int_stats_golden():
+    p, sigma, row_max = S.ita_softmax_int(jnp.asarray(X))
+    np.testing.assert_array_equal(np.asarray(p), P_ONESHOT)
+    np.testing.assert_array_equal(np.asarray(sigma)[:, 0], SIGMA)
+    np.testing.assert_array_equal(np.asarray(row_max)[:, 0], ROW_MAX)
+
+
+def test_golden_consistent_with_eq5():
+    """Independent numpy re-derivation of eq. 4/5 over the golden inputs
+    (guards the vectors themselves against bit-rot)."""
+    x = X.astype(np.int64)
+    k = (x.max(-1, keepdims=True) - x) >> 5
+    sigma = (256 >> k).sum(-1)
+    np.testing.assert_array_equal(sigma, SIGMA)
+    sigma_inv = np.minimum((1 << 16) // np.minimum(sigma, (1 << 15) - 1),
+                           (1 << 16) - 1)
+    np.testing.assert_array_equal(sigma_inv[:, None] >> k, P_ONESHOT)
