@@ -13,6 +13,7 @@ not transfer; the TPU-transferable claims are:
   (CPU; indicative only, the deploy target is the Pallas kernel).
 """
 
+import os
 import time
 
 import jax
@@ -20,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.roofline.analysis import HW
+
+_ITERS = 2 if os.environ.get("ITA_BENCH_SMOKE") else 10
 
 
 def roofline_rows(s=4096, h=32, hd=128, b=8):
@@ -62,10 +65,10 @@ def timed_rows():
     def timeit(fn, *args):
         fn(*args)[0].block_until_ready()
         t0 = time.perf_counter()
-        for _ in range(10):
+        for _ in range(_ITERS):
             out = fn(*args)
         jax.block_until_ready(out)
-        return (time.perf_counter() - t0) / 10 * 1e6
+        return (time.perf_counter() - t0) / _ITERS * 1e6
 
     t_int = timeit(int_fn, q8, k8, v8)
     t_flt = timeit(flt_fn, qf, kf, vf)

@@ -9,6 +9,7 @@ indicative; the structure, not the silicon, is the claim) plus the
 analytic FLOP/byte ratios that do transfer.
 """
 
+import os
 import time
 
 import jax
@@ -47,10 +48,11 @@ def _time(fn, iters=20):
 
 
 def main():
-    from repro.kernels.ita_attention.ops import ita_attention
+    from repro import attention as ATT
     cache, q8, kf, vf = _setup()
     q_last = jnp.asarray(q8[:, :, CTX - 1:])
     k_last, v_last = jnp.asarray(kf[:, CTX - 1:]), jnp.asarray(vf[:, CTX - 1:])
+    smoke = bool(int(os.environ.get("ITA_BENCH_SMOKE", "0")))
 
     def cached_step():
         out, _ = KV.decode_attend(cache, q_last, k_last, v_last, S_Q, S_OUT,
@@ -58,22 +60,25 @@ def main():
         return out
 
     k8_full = KV.quantize_with_scale(
-        jnp.asarray(kf), cache["k_scale"][None, None, :, None]
+        jnp.asarray(kf), cache.k_scale[None, None, :, None]
     ).transpose(0, 2, 1, 3)
     v8_full = KV.quantize_with_scale(
-        jnp.asarray(vf), cache["v_scale"][None, None, :, None]
+        jnp.asarray(vf), cache.v_scale[None, None, :, None]
     ).transpose(0, 2, 1, 3)
+    spec = ATT.AttentionSpec(mode="prefill", impl="ita", layout="bhsd",
+                             scale_kind="per_head", out_dtype="int8")
+    scales = ATT.QuantScales(S_Q, cache.k_scale, cache.v_scale, S_OUT)
 
     def recompute_step():
         # no-cache serving: re-run full-context attention, keep the new row
-        out = ita_attention(jnp.asarray(q8), k8_full, v8_full, S_Q,
-                            cache["k_scale"], cache["v_scale"], S_OUT,
-                            causal=True, mode="onepass", block_q=BLOCK_KV,
-                            block_kv=BLOCK_KV)
+        out = ATT.dispatch(jnp.asarray(q8), k8_full, v8_full, spec=spec,
+                           scales=scales, backend="ita_onepass_pallas",
+                           block_q=BLOCK_KV, block_kv=BLOCK_KV)
         return out[:, :, -1:]
 
-    us_cached = _time(cached_step)
-    us_recomp = _time(recompute_step)
+    iters = 3 if smoke else 20
+    us_cached = _time(cached_step, iters)
+    us_recomp = _time(recompute_step, iters)
     tok_s_cached = B / (us_cached * 1e-6)
     tok_s_recomp = B / (us_recomp * 1e-6)
     print(f"decode/cached_us_per_step,{us_cached:.1f},{tok_s_cached:.6g}")

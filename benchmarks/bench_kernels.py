@@ -30,10 +30,10 @@ def interpret_check_rows():
     """Tiny correctness re-check so `benchmarks.run` exercises kernels."""
     import jax.numpy as jnp
 
+    from repro import attention as ATT
     from repro.kernels.int8_matmul.ops import int8_matmul
     from repro.kernels.int8_matmul.ref import int8_matmul_ref
     from repro.kernels.ita_attention import ref as AR
-    from repro.kernels.ita_attention.ops import ita_attention
 
     rng = np.random.default_rng(0)
     x = rng.integers(-128, 128, (64, 128), dtype=np.int8)
@@ -50,9 +50,12 @@ def interpret_check_rows():
     k = rng.integers(-128, 128, (1, 2, 128, 32), dtype=np.int8)
     v = rng.integers(-128, 128, (1, 2, 128, 32), dtype=np.int8)
     s = np.float32(0.05)
-    o = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                      s, s, s, np.float32(0.02), causal=True,
-                      block_q=32, block_kv=64)
+    o = ATT.dispatch(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        spec=ATT.AttentionSpec(mode="prefill", impl="ita", layout="bhsd",
+                               out_dtype="int8"),
+        scales=ATT.QuantScales.per_tensor(s, s_out=np.float32(0.02)),
+        backend="ita_onepass_pallas", block_q=32, block_kv=64)
     ref2 = AR.ita_attention_stream_ref(
         jnp.asarray(q.reshape(2, 64, 32)), jnp.asarray(k.reshape(2, 128, 32)),
         jnp.asarray(v.reshape(2, 128, 32)),

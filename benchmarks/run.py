@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke]
+
+``--smoke`` (also env ``ITA_BENCH_SMOKE=1``) runs every module with
+reduced iteration counts — the CI guard that keeps the benchmark entry
+points importable and runnable as the APIs underneath them move.
 
 | module            | paper reference                          |
 |-------------------|------------------------------------------|
@@ -14,11 +18,20 @@ Prints ``name,us_per_call,derived`` CSV rows.
 | bench_roofline    | §Roofline table from dry-run artifacts   |
 """
 
+import argparse
+import os
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced iteration counts (CI rot guard)")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["ITA_BENCH_SMOKE"] = "1"
+
     from benchmarks import (bench_attention, bench_dataflow, bench_decode,
                             bench_kernels, bench_roofline, bench_softmax_mae)
     print("name,us_per_call,derived")

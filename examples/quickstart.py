@@ -1,5 +1,5 @@
-"""Quickstart: the ITA integer softmax and fused attention kernel in 60
-seconds.
+"""Quickstart: the ITA integer softmax and the unified attention engine
+in 60 seconds.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,9 +7,9 @@ seconds.
 import jax.numpy as jnp
 import numpy as np
 
+from repro import attention as ATT
 from repro.core import softmax as S
 from repro.core.quant import EPS_MAX
-from repro.kernels.ita_attention.ops import ita_attention
 
 rng = np.random.default_rng(0)
 
@@ -26,22 +26,34 @@ print("ITA softmax MAE vs float:     %.4f" %
 print("adaptive softmax MAE vs float: %.4f" %
       float(jnp.abs(p_adaptive - p_float).mean()))
 
-# --- 2. fused int8 attention (Pallas kernel, interpret mode on CPU) -------
+# --- 2. the attention engine: one spec, capability-dispatched backends ----
 B, H, S_, D = 1, 4, 256, 64
-q = rng.integers(-128, 128, (B, H, S_, D), dtype=np.int8)
-k = rng.integers(-128, 128, (B, H, S_, D), dtype=np.int8)
-v = rng.integers(-128, 128, (B, H, S_, D), dtype=np.int8)
-scale = np.float32(0.04)
+q = jnp.asarray(rng.integers(-128, 128, (B, H, S_, D), dtype=np.int8))
+k = jnp.asarray(rng.integers(-128, 128, (B, H, S_, D), dtype=np.int8))
+v = jnp.asarray(rng.integers(-128, 128, (B, H, S_, D), dtype=np.int8))
 
-out = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                    scale, scale, scale, np.float32(0.02),
-                    causal=True, mode="onepass")      # flash-style, int8
+spec = ATT.AttentionSpec(mode="prefill", impl="ita", causal=True,
+                         layout="bhsd", out_dtype="int8")
+scales = ATT.QuantScales.per_tensor(np.float32(0.04),
+                                    s_out=np.float32(0.02))
+
+print("eligible backends:", ATT.list_backends(spec))
+
+out = ATT.dispatch(q, k, v, spec=spec, scales=scales)   # first eligible
 print("fused attention out:", out.shape, out.dtype,
       "sample:", np.asarray(out)[0, 0, 0, :4].tolist())
 
-out2, = (ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                       scale, scale, scale, np.float32(0.02),
-                       causal=True, mode="twopass"),)  # paper dataflow
+# explicit override: the paper-faithful two-pass dataflow (A matrix in HBM)
+out2 = ATT.dispatch(q, k, v, spec=spec, scales=scales,
+                    backend="ita_twopass_pallas")
 agree = float((out == out2).mean())
 print(f"onepass vs twopass int8 agreement: {agree:.3f} "
       "(different EN semantics, same algorithm)")
+
+# capability negotiation: a softcapped decode spec can't ride the fused
+# kernels — the registry says why, and who serves it instead
+cap_spec = spec.replace(mode="decode", softcap=30.0, layout="bshd",
+                        q_len=1)
+print("softcap decode verdicts:")
+for name, verdict in ATT.backend_reasons(cap_spec).items():
+    print(f"  {name:20s} {'OK' if verdict is True else verdict}")

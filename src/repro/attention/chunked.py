@@ -15,16 +15,19 @@ One skeleton, three arithmetics:
 
 Chunking: python loop over q chunks (static) × ``lax.scan`` over the
 causally-reachable kv chunks per q chunk (so causal/windowed FLOPs are
-~half of dense, matching the analytic roofline). ``cfg.scan_unroll``
-unrolls the kv scan for cost-true dry-run lowering.
+~half of dense, matching the analytic roofline). ``scan_unroll`` unrolls
+the kv scan for cost-true dry-run lowering.
+
+Lives behind the ``float_xla`` / ``ita_chunked_xla`` registry backends —
+call ``repro.attention.dispatch`` rather than this module directly.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.attention.xla import softcap as _softcap
 from repro.core.quant import EPS_MAX, SOFTMAX_SHIFT
 from repro.core.softmax import _ste_floor, _ste_round
 
@@ -33,7 +36,7 @@ Q_CHUNK = 512
 KV_CHUNK = 512
 
 
-def _chunk_mask(b, g, m, cq, ckv, q0, k0, causal, window, kv_len):
+def _chunk_mask(cq, ckv, q0, k0, causal, window, kv_len):
     qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ckv), 0)
     kj = k0 + jax.lax.broadcasted_iota(jnp.int32, (cq, ckv), 1)
     valid = jnp.ones((cq, ckv), jnp.bool_)
@@ -51,9 +54,10 @@ def _gqa_chunk_logits(qc, kc):
     return jnp.einsum("bqgmd,bkgd->bgmqk", qc, kc)
 
 
-def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
+def streaming_attention(q, k, v, *, impl, scale, s_q=None, s_k=None,
                         s_v=None, causal=True, window=0, kv_len=None,
-                        q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+                        softcap=0.0, adaptive=True, q_chunk=Q_CHUNK,
+                        kv_chunk=KV_CHUNK, scan_unroll=False):
     """q (B,Sq,H,hd); k/v (B,Skv,G,hd) (int8 for ita_int). Returns
     (B,Sq,H,hd) f32-ish output of softmax(QKᵀ)·V in the chosen arithmetic.
     Static q_offset=0 (decode uses the direct path)."""
@@ -74,7 +78,7 @@ def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
         v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
     sq, skv = sq_in + pad_q, skv_in + pad_kv
     n_q = sq // cq
-    unroll = bool(getattr(cfg, "scan_unroll", False))
+    unroll = bool(scan_unroll)
 
     if impl == "ita_int":
         # int8 operands stay int8: the dots carry preferred_element_type
@@ -83,12 +87,14 @@ def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
         k_i = k.astype(jnp.int8)
         v_f = v.astype(jnp.int8)
         lmult = jnp.asarray(s_q * s_k * scale / EPS_MAX, jnp.float32)
+        fmult = jnp.asarray(s_q * s_k * scale, jnp.float32)
     elif impl == "ita_ste":
         qq = jnp.clip(_ste_round(q.astype(jnp.float32) / (s_q * 1.0)), -128,
                       127).reshape(b, sq, g, m_, hd)
         kq = jnp.clip(_ste_round(k.astype(jnp.float32) / s_k), -128, 127)
         v_f = v.astype(jnp.float32)
         lmult = s_q * s_k * scale / EPS_MAX
+        fmult = s_q * s_k * scale
     else:
         qf = q.astype(jnp.float32).reshape(b, sq, g, m_, hd)
         kf = k.astype(jnp.float32)
@@ -98,7 +104,7 @@ def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
     for iq in range(n_q):
         q0 = iq * cq
         # causally reachable kv chunk range (static)
-        hi = n_q_kv = (min(q0 + cq, skv) + ckv - 1) // ckv if causal \
+        hi = (min(q0 + cq, skv) + ckv - 1) // ckv if causal \
             else skv // ckv
         lo = 0
         if window > 0:
@@ -123,14 +129,17 @@ def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
                 k_i if impl == "ita_int" else kf if impl == "float" else kq,
                 k0, ckv, 1)
             vc = jax.lax.dynamic_slice_in_dim(v_f, k0, ckv, 1)
-            valid = _chunk_mask(b, g, m_, cq, ckv, q0, k0, causal, window,
-                                kv_len)
+            valid = _chunk_mask(cq, ckv, q0, k0, causal, window, kv_len)
 
             if impl == "ita_int":
                 acc32 = jnp.einsum("bqgmd,bkgd->bgmqk", qc, kc,
                                    preferred_element_type=jnp.int32)
-                lg = jnp.clip(jnp.round(acc32.astype(jnp.float32) * lmult),
-                              -128, 127).astype(jnp.int32)
+                # softcap=0 keeps the pre-multiplied lmult formula —
+                # bit-identical requant vs the fused Pallas kernels
+                lf = (acc32.astype(jnp.float32) * lmult if not softcap
+                      else _softcap(acc32.astype(jnp.float32) * fmult,
+                                    softcap) / EPS_MAX)
+                lg = jnp.clip(jnp.round(lf), -128, 127).astype(jnp.int32)
                 x = jnp.where(valid, lg, -256)
                 new_m = jnp.maximum(m, jnp.max(x, -1, keepdims=True))
                 delta = jnp.minimum(jax.lax.shift_right_logical(
@@ -153,7 +162,9 @@ def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
 
             s = _gqa_chunk_logits(qc, kc)
             if impl == "ita_ste":
-                lg = jnp.clip(_ste_round(s * lmult), -128.0, 127.0)
+                lf = (s * lmult if not softcap
+                      else _softcap(s * fmult, softcap) / EPS_MAX)
+                lg = jnp.clip(_ste_round(lf), -128.0, 127.0)
                 x = jnp.where(valid, lg, NEG)
                 new_m = jnp.maximum(m, jnp.max(x, -1, keepdims=True))
                 delta = _ste_floor(jnp.clip(
@@ -162,9 +173,7 @@ def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
                 w = jnp.where(valid, jnp.exp2(-jnp.clip(kk, 0.0, 30.0)), 0.0)
                 corr = jnp.exp2(-jnp.minimum(delta, 30.0))
             else:
-                s = s * scale
-                if cfg.attn_softcap > 0:
-                    s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
+                s = _softcap(s * scale, softcap)
                 x = jnp.where(valid, s, NEG)
                 new_m = jnp.maximum(m, jnp.max(x, -1, keepdims=True))
                 w = jnp.where(valid, jnp.exp(s - new_m), 0.0)
@@ -179,7 +188,10 @@ def streaming_attention(q, k, v, *, impl, cfg, scale, s_q=None, s_k=None,
 
         if impl == "ita_int":
             sig = jnp.maximum(sig, 1)
-            e_r = 31 - jax.lax.clz(sig)
+            if adaptive:
+                e_r = 31 - jax.lax.clz(sig)
+            else:                       # paper DI: e_r pinned to 8 (2^16/σ)
+                e_r = jnp.full_like(sig, 8)
             pre = jnp.maximum(e_r + 8 - 30, 0)
             inv = (jnp.int32(1) << jnp.minimum(e_r + 8 - pre, 30)) \
                 // jax.lax.shift_right_logical(sig, pre)

@@ -1,0 +1,113 @@
+"""Typed int8 KV-cache ring-buffer state.
+
+``KVCacheState`` replaces the plain ``{"k", "v", "pos", ...}`` dicts the
+serving stack used to pass around: same leaves, same scan/shard/donate
+behaviour (it is a registered dataclass pytree), but the ring-buffer
+invariants live on the type instead of in every caller's head.
+
+Layout: ``k``/``v`` are ``(B, C, G, hd)`` with capacity ``C`` a ring —
+token ``t`` lives in slot ``t % C``. ``pos`` tracks the *logical* stream
+length, from which the valid prefix (``valid_len``) and the logical
+position of new queries (``q_offset``) derive. ``k_scale``/``v_scale``
+are optional per-(kv-)head quantization scales ``(G,)`` (the decode
+engine's finer-than-QAT grid); ``None`` when the cache rides the model's
+per-tensor QAT scales.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheState:
+    k: Any                      # (B, C, G, hd) int8 (or compute dtype)
+    v: Any                      # (B, C, G, hd)
+    pos: Any                    # () int32 — tokens ever written
+    k_scale: Any = None         # (G,) f32 per-head scales, optional
+    v_scale: Any = None         # (G,) f32
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def init(cls, batch: int, capacity: int, n_kv_heads: int, head_dim: int,
+             dtype=jnp.int8, per_head_scales: bool = False) -> "KVCacheState":
+        """Fresh (zeroed) ring-buffer cache."""
+        capacity = max(capacity, 1)
+        shape = (batch, capacity, n_kv_heads, head_dim)
+        scales = (jnp.ones((n_kv_heads,), jnp.float32)
+                  if per_head_scales else None)
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32), k_scale=scales,
+                   v_scale=scales)
+
+    def with_scales(self, k_scale, v_scale) -> "KVCacheState":
+        return dataclasses.replace(self, k_scale=k_scale, v_scale=v_scale)
+
+    # -- ring geometry ----------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+    def valid_len(self) -> jax.Array:
+        """Number of valid (non-evicted) entries in the ring."""
+        return jnp.minimum(self.pos, self.capacity)
+
+    def q_offset(self, s_new: int = 1) -> jax.Array:
+        """Logical position of the first of the ``s_new`` query tokens
+        *just appended*, in ring coordinates: ``valid_len - s_new``.
+        While the ring has not wrapped this is the token's stream
+        position; after wrap the oldest surviving token is redefined as
+        position 0, so the newest query sits at ``C - s_new`` and the
+        sliding-window mask ``(qi - kj) < window`` keeps exactly the last
+        ``window`` slots visible."""
+        return jnp.maximum(self.valid_len() - s_new, 0)
+
+    # -- writes -----------------------------------------------------------
+
+    def prefill_write(self, k_q: jax.Array, v_q: jax.Array) -> "KVCacheState":
+        """Bulk-write ``S`` prefill tokens, evicting beyond capacity.
+
+        ``k_q``/``v_q`` (B, S, G, hd), already quantized. Token ``t``
+        lands in slot ``t % C`` (so a later ``decode_append`` continues
+        the same ring); when ``S >= C`` only the last ``C`` tokens
+        survive."""
+        s = k_q.shape[1]
+        cs = self.capacity
+        if s >= cs:
+            # keep the tail, rolled so slot (t % C) holds token t
+            k_t = jnp.roll(k_q[:, s - cs:], s % cs, axis=1)
+            v_t = jnp.roll(v_q[:, s - cs:], s % cs, axis=1)
+        else:
+            k_t = jax.lax.dynamic_update_slice(self.k, k_q, (0, 0, 0, 0))
+            v_t = jax.lax.dynamic_update_slice(self.v, v_q, (0, 0, 0, 0))
+        return dataclasses.replace(self, k=k_t, v=v_t,
+                                   pos=jnp.asarray(s, jnp.int32))
+
+    def decode_append(self, k_q: jax.Array, v_q: jax.Array) -> "KVCacheState":
+        """Append ``s_new`` decode tokens, token ``pos + i`` to slot
+        ``(pos + i) % C``. Written per token because a blockwise
+        ``dynamic_update_slice`` would *clamp* at the ring boundary
+        instead of wrapping (silently overwriting the newest surviving
+        entries); ``s_new`` is 1 in steady-state decode, <= 8 for
+        speculative bursts."""
+        cs = self.capacity
+        k_t, v_t = self.k, self.v
+        for i in range(k_q.shape[1]):
+            slot = (self.pos + i) % cs
+            k_t = jax.lax.dynamic_update_slice(k_t, k_q[:, i:i + 1],
+                                               (0, slot, 0, 0))
+            v_t = jax.lax.dynamic_update_slice(v_t, v_q[:, i:i + 1],
+                                               (0, slot, 0, 0))
+        return dataclasses.replace(self, k=k_t, v=v_t,
+                                   pos=self.pos + k_q.shape[1])
+
+
+jax.tree_util.register_dataclass(
+    KVCacheState, data_fields=("k", "v", "pos", "k_scale", "v_scale"),
+    meta_fields=())

@@ -59,6 +59,8 @@ class ModelConfig:
     parallelism: str = "tp_fsdp"      # tp_fsdp | fsdp (pure DP/ZeRO-3)
     param_dtype: str = "float32"      # bfloat16 -> f32 master in opt state
     attention_impl: str = "float"     # float|ita|ibert
+    attention_backend: str = ""       # preferred repro.attention backend
+                                      # (used where capable; "" = auto)
     softmax_impl: str = "ita_adaptive"  # ita_paper|ita_adaptive
     dtype: str = "bfloat16"
     remat: bool = True

@@ -4,4 +4,4 @@
 # pure-jnp oracles in each subpackage's ref.py (interpret=True on CPU).
 from repro.kernels.int8_matmul.ops import int8_matmul  # noqa: F401
 from repro.kernels.ita_softmax.ops import ita_softmax  # noqa: F401
-from repro.kernels.ita_attention.ops import ita_attention  # noqa: F401
+from repro.kernels.ita_attention.ops import fused_attention  # noqa: F401

@@ -1,6 +1,9 @@
-"""Shared helpers for the ITA Pallas kernels (mask/index math, DA update)."""
+"""Shared helpers for the ITA Pallas kernels (mask/index math, DA update,
+interpret-mode resolution)."""
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +12,28 @@ from repro.core.quant import SOFTMAX_SHIFT
 
 NEG_SENTINEL = -256          # below any int8 value; int32-overflow safe
 MASK_K = 31                  # shift that zeroes a masked element's term
+
+# Platforms with a compiled Pallas lowering; everything else (CPU CI
+# containers) runs the kernels in interpret mode.
+_COMPILED_PALLAS_PLATFORMS = ("tpu", "gpu")
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the Pallas ``interpret`` flag.
+
+    ``None`` (the default everywhere) means *auto*: interpret only when
+    the detected JAX backend has no compiled Pallas lowering — so the
+    fused kernels never silently run in slow interpret mode on capable
+    hardware. The ``ITA_PALLAS_INTERPRET`` env var (``1``/``0``,
+    ``true``/``false``) overrides auto-detection; an explicit bool
+    argument wins over both.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("ITA_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "")
+    return jax.default_backend() not in _COMPILED_PALLAS_PLATFORMS
 
 
 def tile_mask(q_tile: jax.Array, kv_tile: jax.Array, bq: int, bkv: int,

@@ -1,20 +1,29 @@
-"""Jitted public wrapper for the fused ITA attention kernels.
+"""Jitted plumbing for the fused ITA attention kernels.
 
-Handles (batch, heads, seq, dim) layouts, GQA head-group sharing (via
-kernel index maps — no broadcast copies), padding to block multiples and
-the quantization-scale plumbing:
+This module is the thin compute layer behind the Pallas-backed entries of
+the ``repro.attention`` backend registry (``ita_onepass_pallas``,
+``ita_twopass_pallas``, ``ita_decode_pallas``) — there is no public
+attention entry point here; call ``repro.attention.dispatch``.
+
+``fused_attention`` handles (batch, heads, seq, dim) layouts, GQA
+head-group sharing (via kernel index maps — no broadcast copies), padding
+to block multiples and the quantization-scale plumbing:
 
     logit_mult = s_q * s_k / (sqrt(d) * EPS_MAX)   (requant onto ITA's grid)
     out_mult   = s_v / s_out
 
 Scales may be scalars (per-tensor, the QAT-calibrated path) or per-head
 vectors — ``s_q``/``s_out`` of shape (Hq,), ``s_k``/``s_v`` of shape (Hkv,)
-(per-head KV-cache quantization, see ``repro.runtime.kv_cache``); the
-multipliers are resolved to one value per (batch·head) kernel row.
+(per-head KV-cache quantization); the multipliers are resolved to one
+value per (batch·head) kernel row.
 
-Modes: ``onepass`` (flash-style, default), ``twopass`` (paper-faithful A
-matrix in HBM), ``decode`` (onepass specialised to a single query tile
-against a KV ring buffer — skips q-tiling and invalid KV tiles).
+Kinds: ``onepass`` (flash-style), ``twopass`` (paper-faithful A matrix in
+HBM), ``decode`` (onepass specialised to a single query tile against a KV
+ring buffer — skips q-tiling and invalid KV tiles).
+
+``interpret=None`` auto-resolves via ``repro.kernels.common.
+resolve_interpret`` — compiled on TPU/GPU, interpret elsewhere,
+``ITA_PALLAS_INTERPRET`` env override.
 """
 
 from __future__ import annotations
@@ -26,9 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import EPS_MAX
+from repro.kernels.common import resolve_interpret
 from repro.kernels.ita_attention.kernel import (ita_attention_decode,
                                                 ita_attention_onepass,
                                                 ita_attention_twopass)
+
+KINDS = ("onepass", "twopass", "decode")
 
 
 def _pad_seq(x, mult):
@@ -49,31 +61,13 @@ def _per_head(s, h):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "mode", "adaptive", "block_q", "block_kv",
-    "kv_layout", "interpret"))
-def ita_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
-                  s_q: jax.Array | float, s_k: jax.Array | float,
-                  s_v: jax.Array | float, s_out: jax.Array | float, *,
-                  q_offset: jax.Array | int = 0, kv_len: jax.Array | int | None = None,
-                  causal: bool = True, window: int = 0, mode: str = "onepass",
-                  adaptive: bool = True, block_q: int = 128,
-                  block_kv: int = 128, kv_layout: str = "bhsd",
-                  interpret: bool = True) -> jax.Array:
-    """Quantized multi-head attention with the ITA integer softmax.
-
-    ``q_q``: (B, Hq, Sq, D) int8; ``k_q``/``v_q``: (B, Hkv, Skv, D) int8
-    (``kv_layout="bhsd"``) or, for ``mode="decode"``, cache-native
-    (B, Skv, Hkv, D) ring buffers (``kv_layout="bsgd"`` — consumed in
-    place via kernel index maps, no transpose/broadcast copies).
-    GQA: Hkv must divide Hq; KV heads are shared per group via index
-    maps — the broadcast never materializes.
-    ``q_offset``: logical position of query 0 (decode: valid_kv - Sq).
-    ``kv_len``: valid prefix of the KV cache (defaults to Skv).
-    Returns (B, Hq, Sq, D) int8 at scale ``s_out``.
-    """
+    "causal", "window", "kind", "adaptive", "block_q", "block_kv",
+    "kv_native", "interpret"))
+def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
+           causal, window, kind, adaptive, block_q, block_kv, kv_native,
+           interpret):
     b, hq, sq, d = q_q.shape
-    if kv_layout == "bsgd":
-        assert mode == "decode", "bsgd layout is decode-only"
+    if kv_native:
         skv, hkv = k_q.shape[1], k_q.shape[2]
     else:
         hkv, skv = k_q.shape[1], k_q.shape[2]
@@ -91,7 +85,7 @@ def ita_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
     bq = min(block_q, max(8, sq))
     bkv = min(block_kv, max(128, skv)) if skv >= 128 else skv
     qf = _pad_seq(q_q.reshape(b * hq, sq, d), bq)
-    if kv_layout == "bsgd":
+    if kv_native:
         kf = _pad_seq(k_q, bkv)
         vf = _pad_seq(v_q, bkv)
     else:
@@ -99,13 +93,13 @@ def ita_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
         vf = _pad_seq(v_q.reshape(b * hkv, skv, d), bkv)
 
     kv_len = skv if kv_len is None else kv_len
-    if mode == "decode":
+    if kind == "decode":
         out = ita_attention_decode(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
             causal=causal, window=window, adaptive=adaptive,
             block_kv=bkv, kv_rep=rep,
-            hq=hq if kv_layout == "bsgd" else None, interpret=interpret)
-    elif mode == "onepass":
+            hq=hq if kv_native else None, interpret=interpret)
+    elif kind == "onepass":
         out = ita_attention_onepass(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
             causal=causal, window=window, adaptive=adaptive, block_q=bq,
@@ -116,3 +110,34 @@ def ita_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
             causal=causal, window=window, adaptive=adaptive, block_q=bq,
             block_kv=bkv, kv_rep=rep, interpret=interpret)
     return out[:, :sq].reshape(b, hq, sq, d)
+
+
+def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
+                    s_q, s_k, s_v, s_out, *,
+                    q_offset: jax.Array | int = 0,
+                    kv_len: jax.Array | int | None = None,
+                    causal: bool = True, window: int = 0,
+                    kind: str = "onepass", adaptive: bool = True,
+                    block_q: int = 128, block_kv: int = 128,
+                    kv_native: bool = False,
+                    interpret: bool | None = None) -> jax.Array:
+    """Quantized multi-head attention with the ITA integer softmax.
+
+    ``q_q``: (B, Hq, Sq, D) int8; ``k_q``/``v_q``: (B, Hkv, Skv, D) int8
+    or, for ``kind="decode"`` with ``kv_native=True``, cache-native
+    (B, Skv, Hkv, D) ring buffers (consumed in place via kernel index
+    maps, no transpose/broadcast copies). GQA: Hkv must divide Hq; KV
+    heads are shared per group via index maps — the broadcast never
+    materializes.
+    ``q_offset``: logical position of query 0 (decode: valid_kv - Sq).
+    ``kv_len``: valid prefix of the KV cache (defaults to Skv).
+    Returns (B, Hq, Sq, D) int8 at scale ``s_out``.
+    """
+    assert kind in KINDS, kind
+    assert not (kv_native and kind != "decode"), \
+        "cache-native KV layout is decode-only"
+    return _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, q_offset=q_offset,
+                  kv_len=kv_len, causal=causal, window=window, kind=kind,
+                  adaptive=adaptive, block_q=block_q, block_kv=block_kv,
+                  kv_native=kv_native,
+                  interpret=resolve_interpret(interpret))

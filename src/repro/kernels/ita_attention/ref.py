@@ -101,7 +101,7 @@ def ita_attention_fused_ref(q_q, k_q, v_q, lmult, omult, kv_len, *, causal,
 
 def ita_attention_stream_ref(q_q, k_q, v_q, lmult, omult, kv_len, *, causal,
                              window=0, adaptive=True, block_kv=128,
-                             mode="onepass", q_offset=0):
+                             kind="onepass", q_offset=0):
     """Tile-by-tile mirror of the kernels (exact-match oracle)."""
     bh, sq, d = q_q.shape
     skv = k_q.shape[1]
@@ -126,13 +126,13 @@ def ita_attention_stream_ref(q_q, k_q, v_q, lmult, omult, kv_len, *, causal,
         run_sigma = jax.lax.shift_right_logical(run_sigma, delta) \
             + 2 * jnp.sum(u, axis=-1, keepdims=True)
         run_max = new_max
-        if mode == "onepass":
+        if kind == "onepass":
             pv = jnp.einsum("bqk,bkd->bqd", u, v_q[:, sl].astype(jnp.int32))
             acc = acc * jnp.exp2(-delta.astype(jnp.float32)) \
                 + pv.astype(jnp.float32)
 
     inv, e_r = _inverse(run_sigma, adaptive)
-    if mode == "onepass":
+    if kind == "onepass":
         scale = 2.0 * inv.astype(jnp.float32) * jnp.exp2(
             -(e_r + 8).astype(jnp.float32)) * omult
         y = jnp.round(acc * scale)

@@ -16,10 +16,12 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro import attention as ATT
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch.hints import use_hints
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_model
+from repro.models.attention import make_spec
 from repro.runtime.generate import generate
 
 
@@ -29,6 +31,14 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--attention-impl", default="ita",
                     choices=["float", "ita", "ibert"])
+    ap.add_argument("--attention-backend", default="",
+                    choices=[""] + ATT.list_backends(),
+                    help="prefer a registry backend at every call site it "
+                         "can serve (no backend covers all of prefill+"
+                         "decode); capability dispatch fills the rest")
+    ap.add_argument("--list-backends", action="store_true",
+                    help="print every backend's verdict for this "
+                         "arch/impl's decode spec, then exit")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -37,7 +47,17 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
-                     attention_impl=args.attention_impl)
+                     attention_impl=args.attention_impl,
+                     attention_backend=args.attention_backend)
+
+    if args.list_backends:
+        spec = make_spec(cfg, mode="decode", causal=cfg.causal,
+                         window=cfg.window, q_len=1)
+        print(f"[serve] decode spec for {cfg.name}: {spec}")
+        for name, verdict in ATT.backend_reasons(spec).items():
+            mark = "eligible" if verdict is True else f"no — {verdict}"
+            print(f"[serve]   {name:20s} {mark}")
+        return
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
     key = jax.random.PRNGKey(args.seed)
 

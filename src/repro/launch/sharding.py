@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax.tree_util import DictKey, SequenceKey
+from jax.tree_util import DictKey, GetAttrKey
 
 # column-parallel (in, out) -> (fsdp, model); row-parallel -> (model, fsdp)
 _COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_gate_branch", "w_r",
@@ -137,13 +137,16 @@ def batch_shardings(batch_shape, mesh, parallelism="tp_fsdp"):
 
 
 def _leaf_cache_spec(path, leaf, batch, mesh):
-    """Cache leaves carry a leading scan-period axis; dispatch by name."""
-    names = [p.key for p in path if isinstance(p, DictKey)]
+    """Cache leaves carry a leading scan-period axis; dispatch by name.
+    Caches mix dict nodes and registered-dataclass nodes (KVCacheState),
+    so both DictKey and GetAttrKey path entries name leaves."""
+    names = [p.key if isinstance(p, DictKey) else p.name
+             for p in path if isinstance(p, (DictKey, GetAttrKey))]
     name = names[-1] if names else ""
     bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     shape = leaf.shape
     nd = len(shape)
-    if nd <= 1 or name == "pos":
+    if nd <= 1 or name in ("pos", "k_scale", "v_scale"):
         return P()
     b_ok = nd >= 2 and shape[1] == batch \
         and batch % _axis_size(mesh, bax) == 0

@@ -1,5 +1,5 @@
-"""Multi-head attention with ITA quantized attention as a first-class
-implementation choice.
+"""Multi-head attention layer: projections + RoPE + KV caching around the
+unified attention engine (``repro.attention``).
 
 ``attention_impl``:
 - ``float`` — bf16/f32 softmax attention (baseline).
@@ -14,22 +14,27 @@ implementation choice.
 - ``ibert`` — same quantized pipeline with I-BERT's 32-bit polynomial
               softmax (the paper's accuracy baseline).
 
-GQA is native (no KV broadcast); sliding-window, logit softcap and
-cross-attention (audio/vision memory) are supported — see DESIGN.md
-§Arch-applicability for how each assigned architecture uses these.
+This module owns the *layer*: weight init, projections, RoPE, sharding
+hints and ring-buffer bookkeeping (``repro.attention.KVCacheState``). The
+attention computation itself — which kernel/XLA path serves a given
+(mode, features) combination — is entirely the registry's decision:
+one ``AttentionSpec`` + ``QuantScales`` per call, ``dispatch`` picks the
+backend (``cfg.attention_backend`` pins one explicitly). GQA is native
+(no KV broadcast); sliding-window, logit softcap and cross-attention
+(audio/vision memory) are supported — see DESIGN.md §Arch-applicability
+for how each assigned architecture uses these, and DESIGN.md §Backends
+for the capability matrix.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import softmax as S
-from repro.core.quant import EPS_MAX, INT8_MAX, INT8_MIN
+from repro import attention as ATT
+from repro.attention.xla import quantize_to_int8
 from repro.launch import hints
-from repro.models.layers import _normal, rope, softcap
-from repro.runtime import kv_cache as KV
+from repro.models.layers import _normal, rope
 
 
 def init_attention(key, cfg, cross: bool = False):
@@ -59,169 +64,29 @@ def _split_heads(x, n, hd):
     return x.reshape(*x.shape[:-1], n, hd)
 
 
-def _mask(sq, skv, q_offset, causal, window, kv_len):
-    qi = q_offset + jnp.arange(sq, dtype=jnp.int32)[:, None]
-    kj = jnp.arange(skv, dtype=jnp.int32)[None, :]
-    m = jnp.ones((sq, skv), jnp.bool_)
-    if causal or window > 0:
-        m &= qi >= kj
-    if window > 0:
-        m &= (qi - kj) < window
-    if kv_len is not None:
-        m &= kj < kv_len
-    return m
-
-
-def _gqa_logits(q, k):
-    """q (B,Sq,H,hd), k (B,Skv,G,hd) -> logits (B,G,H/G,Sq,Skv) without
-    materializing broadcast KV heads."""
-    b, sq, h, hd = q.shape
-    g = k.shape[2]
-    qg = q.reshape(b, sq, g, h // g, hd)
-    return jnp.einsum("bqgmd,bkgd->bgmqk", qg, k)
-
-
-def _gqa_out(p, v):
-    """p (B,G,M,Sq,Skv), v (B,Skv,G,hd) -> (B,Sq,H,hd)."""
-    out = jnp.einsum("bgmqk,bkgd->bqgmd", p, v)
-    b, sq, g, m, hd = out.shape
-    return out.reshape(b, sq, g * m, hd)
-
-
-def _quantize_dyn(x, scale):
-    return KV.quantize_with_scale(x, scale)
-
-
-def attention_core(q, k, v, *, cfg, params, causal, window, q_offset=0,
-                   kv_len=None, mode="train", k_quant=None, v_quant=None):
-    """The paper's pipeline: Q·Kᵀ -> softmax -> A·V.
-
-    q: (B,Sq,H,hd) float; k/v: (B,Skv,G,hd) float *or* pre-quantized int8
-    (``k_quant``/``v_quant`` from an int8 KV cache).
-    Returns (B,Sq,H,hd) float.
-
-    Dispatch: decode (Sq small, traced q_offset) takes the *direct* path
-    over the full KV cache; train/prefill take the *streaming chunked*
-    path (repro.models.chunked_attention) so the S×S matrix never
-    materializes — the paper's streaming-softmax dataflow at XLA level.
-    """
-    impl = cfg.attention_impl
-    scale = cfg.query_scale or cfg.head_dim ** -0.5
-    sq_, skv = q.shape[1], (k_quant if k_quant is not None else k).shape[1]
-    chunked = mode != "decode" and sq_ > 1 and impl != "ibert"
-
-    if chunked:
-        from repro.models.chunked_attention import streaming_attention
-        ck = dict(q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
-        if impl == "float":
-            out = streaming_attention(q, k, v, impl="float", cfg=cfg,
-                                      scale=scale, causal=causal,
-                                      window=window, kv_len=kv_len, **ck)
-        else:
-            s_q, s_k, s_v = params["s_q"], params["s_k"], params["s_v"]
-            if mode == "train":
-                from repro.core.quant import fake_quant
-                out = streaming_attention(
-                    q, k, fake_quant(v, s_v), impl="ita_ste", cfg=cfg,
-                    scale=scale, s_q=s_q, s_k=s_k, s_v=s_v, causal=causal,
-                    window=window, kv_len=kv_len, **ck)
-                if "s_out" in params:
-                    # QAT sees the serve-time inter-block output requant,
-                    # training the s_out grid the decode kernel deploys on
-                    out = fake_quant(out, params["s_out"])
-            else:
-                q8 = _quantize_dyn(q, s_q)
-                k8 = k_quant if k_quant is not None else _quantize_dyn(k, s_k)
-                v8 = v_quant if v_quant is not None else _quantize_dyn(v, s_v)
-                out = streaming_attention(
-                    q8, k8, v8, impl="ita_int", cfg=cfg, scale=scale,
-                    s_q=s_q, s_k=s_k, s_v=s_v, causal=causal, window=window,
-                    kv_len=kv_len, **ck)
-        return out.astype(q.dtype if q.dtype != jnp.int8 else
-                          cfg.compute_dtype())
-
-    mask = _mask(sq_, skv, q_offset, causal, window, kv_len)[None, None, None]
-
-    if impl == "float" or (mode == "train" and impl == "ibert"):
-        logits = _gqa_logits(q, k) * scale
-        logits = softcap(logits, cfg.attn_softcap)
-        logits = jnp.where(mask, logits, -jnp.inf)
-        p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-        p = jnp.where(mask, p, 0.0).astype(v.dtype)
-        return _gqa_out(p, v)
-
-    s_q, s_k, s_v = params["s_q"], params["s_k"], params["s_v"]
-
-    if mode == "train":                      # QAT forward (STE, float ops)
-        from repro.core.quant import fake_quant
-        qf = fake_quant(q, s_q)
-        kf = fake_quant(k, s_k)
-        vf = fake_quant(v, s_v)
-        logits = _gqa_logits(qf, kf) * scale
-        logits = softcap(logits, cfg.attn_softcap)
-        p = S.ita_softmax_ste(logits.astype(jnp.float32),
-                              mask=jnp.broadcast_to(mask, logits.shape))
-        out = _gqa_out(p.astype(v.dtype), vf)
-        if "s_out" in params:
-            out = fake_quant(out, params["s_out"])
-        return out
-
-    # --- integer serve path (direct: decode / ibert) -------------------
-    q8 = _quantize_dyn(q, s_q)
-    k8 = k_quant if k_quant is not None else _quantize_dyn(k, s_k)
-    v8 = v_quant if v_quant is not None else _quantize_dyn(v, s_v)
-
-    # Single-token decode rides the fused decode-shaped Pallas kernel,
-    # consuming the int8 ring buffers cache-natively (kv_layout="bsgd")
-    # and requantizing the output onto the s_out grid. Falls back to the
-    # XLA path for softcap / custom query scale (kernel-unsupported) or
-    # legacy param sets without s_out.
-    if (impl == "ita" and mode == "decode" and sq_ <= 8
-            and not cfg.attn_softcap and not cfg.query_scale
-            and "s_out" in params):
-        from repro.kernels.ita_attention.ops import ita_attention
-        s_o = params["s_out"]
-        out_i8 = ita_attention(
-            jnp.swapaxes(q8, 1, 2), k8, v8, s_q, s_k, s_v, s_o,
-            q_offset=q_offset, kv_len=kv_len, causal=causal, window=window,
-            mode="decode", adaptive=cfg.softmax_impl != "ita_paper",
-            kv_layout="bsgd")
-        out = jnp.swapaxes(out_i8, 1, 2).astype(jnp.float32) * s_o
-        return out.astype(cfg.compute_dtype())
-
-    acc = _gqa_logits(q8.astype(jnp.int32), k8.astype(jnp.int32))   # int32
-    logits_f = acc.astype(jnp.float32) * (s_q * s_k * scale)
-    logits_f = softcap(logits_f, cfg.attn_softcap)
-    lq = jnp.clip(jnp.round(logits_f / EPS_MAX), INT8_MIN, INT8_MAX
-                  ).astype(jnp.int32)
-    bmask = jnp.broadcast_to(mask, lq.shape)
-
-    if impl == "ibert":
-        p = S.ibert_softmax(lq, mask=bmask)                 # f32 probs
-        out = jnp.einsum("bgmqk,bkgd->bqgmd", p, v8.astype(jnp.float32))
-        out = out * s_v
-    else:                                                   # ITA
-        if cfg.softmax_impl == "ita_paper":
-            p_int, sigma, _ = S.ita_softmax_int(lq, mask=bmask)
-            e_r = jnp.full_like(sigma, 8)
-        else:                                               # adaptive (default)
-            p_int, e_r, _ = S.ita_softmax_adaptive_int(lq, mask=bmask)
-        acc_o = jnp.einsum("bgmqk,bkgd->bqgmd", p_int,
-                           v8.astype(jnp.int32))            # Σp·v, int32-safe
-        out = acc_o.astype(jnp.float32) \
-            * jnp.exp2(-e_r.astype(jnp.float32)).transpose(0, 3, 1, 2, 4) \
-            * s_v
-    b, sq2, g, m, hd = out.shape
-    return out.reshape(b, sq2, g * m, hd).astype(cfg.compute_dtype())
+def make_spec(cfg, *, mode, causal, window, q_len=None,
+              has_s_out=True) -> ATT.AttentionSpec:
+    """The layer's view of the engine: one spec per (cfg, call site).
+    ``has_s_out=False`` declares a legacy param set without the output
+    requant scale — the fused kernels then decline and the XLA paths
+    serve (PR-1 fallback semantics, now a capability)."""
+    return ATT.AttentionSpec(
+        mode=mode, impl=cfg.attention_impl, causal=causal, window=window,
+        softcap=cfg.attn_softcap, query_scale=cfg.query_scale,
+        softmax="paper" if cfg.softmax_impl == "ita_paper" else "adaptive",
+        layout="bshd", scale_kind="per_tensor", out_dtype="float",
+        has_s_out=has_s_out, q_len=q_len, n_heads=cfg.n_heads)
 
 
 def apply_attention(params, x, *, cfg, kind="global", positions=None,
                     mem=None, cache=None, mode="train"):
-    """Full attention layer: projections + RoPE + core + output proj.
+    """Full attention layer: projections + RoPE + engine dispatch + output
+    projection.
 
     ``kind``: global | local (cfg.local_window) | swa (cfg.window) | cross.
-    ``cache`` (serve): dict with int8 (ita) or compute-dtype K/V ring
-    buffers and the current position; returns (y, new_cache).
+    ``cache`` (serve): ``KVCacheState`` ring buffer (int8 for quantized
+    impls, compute dtype for float), or a ``{"k8", "v8"}`` dict for the
+    static cross-attention memory; returns (y, new_cache).
     """
     d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = x.dtype
@@ -261,41 +126,50 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
         k = hints.constrain(k, "batch", None, "kv_heads", None)
         v = hints.constrain(v, "batch", None, "kv_heads", None)
 
-    new_cache = cache
+    scales = ATT.QuantScales.from_params(params)
     quant_cache = cfg.attention_impl != "float"
 
-    def _q(t, s):
-        return _quantize_dyn(t, params[s]) if quant_cache else t
+    def run(qq, kk, vv, *, mode, causal=causal, window=window,
+            q_offset=0, kv_len=None):
+        spec = make_spec(cfg, mode=mode, causal=causal, window=window,
+                         q_len=qq.shape[1],
+                         has_s_out=scales.s_out is not None)
+        # cfg.attention_backend is a *preference*: it pins the backend at
+        # every call site it can serve (no backend serves all of
+        # train/prefill/decode), and capability dispatch covers the rest.
+        backend = cfg.attention_backend or None
+        if backend is not None \
+                and ATT.get_backend(backend).supports(spec) is not True:
+            backend = None
+        out = ATT.dispatch(qq, kk, vv, spec=spec, scales=scales,
+                           q_offset=q_offset, kv_len=kv_len,
+                           backend=backend, q_chunk=cfg.attn_q_chunk,
+                           kv_chunk=cfg.attn_kv_chunk,
+                           scan_unroll=cfg.scan_unroll)
+        return out.astype(dt)
 
+    def _q(t, s):
+        return quantize_to_int8(t, params[s]) if quant_cache else t
+
+    new_cache = cache
     if cache is None:
-        y = attention_core(q, k, v, cfg=cfg, params=params, causal=causal,
-                           window=window, mode=mode)
+        y = run(q, k, v, mode=mode)
     elif cross:
         if mode != "decode":                        # (re)compute at prefill
             cache = dict(cache, k8=_q(k, "s_k"), v8=_q(v, "s_v"))
         new_cache = cache
-        kw = (dict(k_quant=cache["k8"], v_quant=cache["v8"])
-              if quant_cache else {})
-        y = attention_core(q, None if quant_cache else cache["k8"],
-                           None if quant_cache else cache["v8"], cfg=cfg,
-                           params=params, causal=False, window=0, mode=mode,
-                           **kw)
+        y = run(q, cache["k8"], cache["v8"], mode=mode)
     elif mode == "prefill":
         # Full in-layer attention; then write the canonical ring-buffer
         # tail (token t lives at slot t % cache_size) so decode can append.
-        y = attention_core(q, k, v, cfg=cfg, params=params, causal=causal,
-                           window=window, mode=mode)
-        new_cache = KV.prefill_write(cache, _q(k, "s_k"), _q(v, "s_v"))
+        y = run(q, k, v, mode=mode)
+        new_cache = cache.prefill_write(_q(k, "s_k"), _q(v, "s_v"))
     else:                                           # decode append
         s_new = q.shape[1]
-        new_cache = KV.decode_append(cache, _q(k, "s_k"), _q(v, "s_v"))
-        kc, vc = new_cache["k"], new_cache["v"]
-        kw = dict(k_quant=kc, v_quant=vc) if quant_cache else {}
-        y = attention_core(q, None if quant_cache else kc,
-                           None if quant_cache else vc, cfg=cfg,
-                           params=params, causal=causal, window=window,
-                           q_offset=KV.q_offset(new_cache, s_new),
-                           kv_len=KV.valid_len(new_cache), mode=mode, **kw)
+        new_cache = cache.decode_append(_q(k, "s_k"), _q(v, "s_v"))
+        y = run(q, new_cache.k, new_cache.v, mode=mode,
+                q_offset=new_cache.q_offset(s_new),
+                kv_len=new_cache.valid_len())
 
     y = y.reshape(*y.shape[:-2], h * hd) @ params["wo"].astype(dt)
     y = hints.constrain(y, "batch", "seq", None)

@@ -79,13 +79,13 @@ def init_block(key, cfg, kind: str):
 
 def init_block_cache(cfg, kind: str, batch: int, max_len: int):
     """Zero cache template for one block (None entries where stateless)."""
-    from repro.runtime.kv_cache import init_cache
+    from repro.attention import KVCacheState
     g, hd = cfg.n_kv_heads, cfg.head_dim
     quant = cfg.attention_impl != "float"
     kv_dt = jnp.int8 if quant else cfg.compute_dtype()
 
     def kv_cache(size):
-        return init_cache(batch, size, g, hd, dtype=kv_dt)
+        return KVCacheState.init(batch, size, g, hd, dtype=kv_dt)
 
     if kind in ("attn", "enc"):
         return {"mix": kv_cache(max_len)}

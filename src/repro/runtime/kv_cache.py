@@ -1,29 +1,21 @@
-"""Int8 KV-cache ring buffers for autoregressive decode.
+"""Int8 KV-cache decode engine: quantization helpers + the kernel-level
+prefill/decode loop over a ``repro.attention.KVCacheState`` ring buffer.
 
-The serving-side companion to the ITA kernels: K/V projections are stored
-quantized (int8 + quantization scales), so the cache is 4x smaller than
-f32 and feeds the integer attention path directly — no dequantize pass,
-the int8 MXU consumes the cache bytes as stored (paper §III's
-weight-stationary philosophy applied to the KV stream).
+K/V projections are stored quantized (int8 + quantization scales), so the
+cache is 4x smaller than f32 and feeds the integer attention path
+directly — no dequantize pass, the int8 MXU consumes the cache bytes as
+stored (paper §III's weight-stationary philosophy applied to the KV
+stream). The ring-buffer semantics (slot ``t % C``, logical ``pos``,
+``valid_len``/``q_offset`` derivation) live on the typed state in
+``repro.attention.state``; this module adds the *engine*: per-head
+symmetric quantization of the KV stream and the prefill/decode attend
+steps, dispatched through the attention backend registry (layout
+capabilities select the fused Pallas kernels — the decode step consumes
+the ring buffers cache-natively, no per-step transpose or broadcast).
 
-A cache is a plain dict pytree (scan/shard/donate friendly):
-
-    {"k": (B, C, G, hd) int8,   "v": (B, C, G, hd) int8,
-     "pos": () int32            # total tokens ever written
-     [, "k_scale": (G,) f32, "v_scale": (G,) f32]}   # per-head scales
-
-``C`` (capacity) is a ring: token ``t`` lives in slot ``t % C``.  For
-global attention ``C >= max_len`` and the ring never wraps; for sliding-
-window layers ``C = window`` and old tokens are evicted by overwrite.
-``pos`` tracks the *logical* stream length, from which the valid prefix
-(``kv_len``) and the logical position of new queries (``q_offset``) are
-derived — the plumbing ``ita_attention`` needs for decode.
-
-Per-head scales: per (kv-)head symmetric quantization of the cached K/V
-(finer than the per-tensor QAT scale; the decode engine in
-``repro.runtime.generate`` and ``benchmarks/bench_decode.py`` use it).
-The model path (``repro.models.attention``) passes the QAT per-tensor
-scales instead, so train/serve semantics stay aligned.
+Per-head scales are finer than the per-tensor QAT grid; the model path
+(``repro.models.attention``) passes the QAT per-tensor scales instead, so
+train/serve semantics stay aligned.
 """
 
 from __future__ import annotations
@@ -31,7 +23,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.attention import AttentionSpec, KVCacheState, QuantScales, dispatch
 from repro.core.quant import INT8_MAX, INT8_MIN
+
+__all__ = ["KVCacheState", "init_cache", "quantize_per_head",
+           "quantize_with_scale", "prefill_attend", "decode_attend"]
 
 
 def quantize_per_head(x: jax.Array, head_axis: int = 2):
@@ -56,124 +52,67 @@ def quantize_with_scale(x: jax.Array, scale: jax.Array) -> jax.Array:
 
 
 def init_cache(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
-               dtype=jnp.int8, per_head_scales: bool = False) -> dict:
+               dtype=jnp.int8, per_head_scales: bool = False) -> KVCacheState:
     """Fresh (zeroed) ring-buffer cache."""
-    capacity = max(capacity, 1)
-    cache = {
-        "k": jnp.zeros((batch, capacity, n_kv_heads, head_dim), dtype),
-        "v": jnp.zeros((batch, capacity, n_kv_heads, head_dim), dtype),
-        "pos": jnp.zeros((), jnp.int32),
-    }
-    if per_head_scales:
-        cache["k_scale"] = jnp.ones((n_kv_heads,), jnp.float32)
-        cache["v_scale"] = jnp.ones((n_kv_heads,), jnp.float32)
-    return cache
-
-
-def capacity(cache: dict) -> int:
-    return cache["k"].shape[1]
-
-
-def valid_len(cache: dict) -> jax.Array:
-    """Number of valid (non-evicted) entries in the ring."""
-    return jnp.minimum(cache["pos"], capacity(cache))
-
-
-def q_offset(cache: dict, s_new: int = 1) -> jax.Array:
-    """Logical position of the first of the ``s_new`` query tokens *just
-    appended* to the cache, in ring coordinates: ``valid_len - s_new``.
-    While the ring has not wrapped this is the token's stream position;
-    after wrap the oldest surviving token is redefined as position 0, so
-    the newest query sits at ``C - s_new`` and the sliding-window mask
-    ``(qi - kj) < window`` keeps exactly the last ``window`` slots visible.
-    """
-    return jnp.maximum(valid_len(cache) - s_new, 0)
-
-
-def prefill_write(cache: dict, k_q: jax.Array, v_q: jax.Array) -> dict:
-    """Bulk-write ``S`` prefill tokens, evicting beyond capacity.
-
-    ``k_q``/``v_q`` (B, S, G, hd), already quantized. Token ``t`` lands in
-    slot ``t % C`` (so a later ``decode_append`` continues the same ring);
-    when ``S >= C`` only the last ``C`` tokens survive.
-    """
-    s = k_q.shape[1]
-    cs = capacity(cache)
-    if s >= cs:
-        # keep the tail, rolled so slot (t % C) holds token t
-        k_t = jnp.roll(k_q[:, s - cs:], s % cs, axis=1)
-        v_t = jnp.roll(v_q[:, s - cs:], s % cs, axis=1)
-    else:
-        k_t = jax.lax.dynamic_update_slice(cache["k"], k_q, (0, 0, 0, 0))
-        v_t = jax.lax.dynamic_update_slice(cache["v"], v_q, (0, 0, 0, 0))
-    return dict(cache, k=k_t, v=v_t, pos=jnp.asarray(s, jnp.int32))
-
-
-def decode_append(cache: dict, k_q: jax.Array, v_q: jax.Array) -> dict:
-    """Append ``s_new`` decode tokens, token ``pos + i`` to slot
-    ``(pos + i) % C``. Written per token because a blockwise
-    ``dynamic_update_slice`` would *clamp* at the ring boundary instead of
-    wrapping (silently overwriting the newest surviving entries);
-    ``s_new`` is 1 in steady-state decode, ≤ 8 for speculative bursts.
-    """
-    cs = capacity(cache)
-    k_t, v_t = cache["k"], cache["v"]
-    for i in range(k_q.shape[1]):
-        slot = (cache["pos"] + i) % cs
-        k_t = jax.lax.dynamic_update_slice(k_t, k_q[:, i:i + 1],
-                                           (0, slot, 0, 0))
-        v_t = jax.lax.dynamic_update_slice(v_t, v_q[:, i:i + 1],
-                                           (0, slot, 0, 0))
-    return dict(cache, k=k_t, v=v_t, pos=cache["pos"] + k_q.shape[1])
+    return KVCacheState.init(batch, capacity, n_kv_heads, head_dim,
+                             dtype=dtype, per_head_scales=per_head_scales)
 
 
 # ---------------------------------------------------------------------------
 # Kernel-level decode engine (one attention layer over one cache)
 # ---------------------------------------------------------------------------
 
-def prefill_attend(cache: dict, q_q: jax.Array, k_new: jax.Array,
+def prefill_attend(cache: KVCacheState, q_q: jax.Array, k_new: jax.Array,
                    v_new: jax.Array, s_q, s_out, *, causal: bool = True,
                    window: int = 0, block_q: int = 128, block_kv: int = 128,
-                   interpret: bool = True):
+                   interpret: bool | None = None):
     """Quantized prefill: per-head-quantize and cache K/V, run the fused
     ITA kernel over the prompt. ``q_q`` (B, Hq, S, D) int8 at scale
     ``s_q``; ``k_new``/``v_new`` (B, S, G, D) float. Returns
-    ``(out int8 at s_out, new_cache)``."""
-    from repro.kernels.ita_attention.ops import ita_attention
+    ``(out int8 at s_out, new_cache)``.
+
+    Dispatch note: the ``bhsd`` kernel layout + per-head scales make the
+    streaming XLA backend ineligible, so the registry lands on
+    ``ita_onepass_pallas`` — capability-driven, no hand branch.
+    """
     k_q, k_scale = quantize_per_head(k_new)
     v_q, v_scale = quantize_per_head(v_new)
-    cache = prefill_write(cache, k_q, v_q)
-    cache = dict(cache, k_scale=k_scale, v_scale=v_scale)
-    out = ita_attention(q_q, k_q.transpose(0, 2, 1, 3),
-                        v_q.transpose(0, 2, 1, 3), s_q, k_scale, v_scale,
-                        s_out, causal=causal, window=window, mode="onepass",
-                        block_q=block_q, block_kv=block_kv,
-                        interpret=interpret)
+    cache = cache.prefill_write(k_q, v_q).with_scales(k_scale, v_scale)
+    spec = AttentionSpec(mode="prefill", impl="ita", causal=causal,
+                         window=window, layout="bhsd",
+                         scale_kind="per_head", out_dtype="int8",
+                         q_len=q_q.shape[2])
+    out = dispatch(q_q, k_q.transpose(0, 2, 1, 3), v_q.transpose(0, 2, 1, 3),
+                   spec=spec,
+                   scales=QuantScales(s_q, k_scale, v_scale, s_out),
+                   block_q=block_q, block_kv=block_kv, interpret=interpret)
     return out, cache
 
 
-def decode_attend(cache: dict, q_q: jax.Array, k_new: jax.Array,
+def decode_attend(cache: KVCacheState, q_q: jax.Array, k_new: jax.Array,
                   v_new: jax.Array, s_q, s_out, *, causal: bool = True,
                   window: int = 0, block_kv: int = 128,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """One incremental decode step through the cache.
 
     Appends the new token's K/V (quantized onto the cache's standing
     per-head scales — the scales are frozen after prefill so cached bytes
     never need rescaling) and attends the single query over the valid
-    prefix via the fused decode-shaped kernel. ``q_q`` (B, Hq, 1, D) int8;
-    ``k_new``/``v_new`` (B, 1, G, D) float. Returns ``(out, new_cache)``.
+    prefix via the fused decode-shaped kernel, consuming the ring buffers
+    cache-natively (``bhsd_bsgd`` layout — no per-step transpose or head
+    broadcast). ``q_q`` (B, Hq, 1, D) int8; ``k_new``/``v_new``
+    (B, 1, G, D) float. Returns ``(out, new_cache)``.
     """
-    from repro.kernels.ita_attention.ops import ita_attention
-    k_q = quantize_with_scale(k_new, cache["k_scale"][None, None, :, None])
-    v_q = quantize_with_scale(v_new, cache["v_scale"][None, None, :, None])
-    cache = decode_append(cache, k_q, v_q)
-    # cache-native kv_layout: the ring buffers are consumed in place by
-    # the decode kernel's index maps — no per-step transpose/broadcast
-    out = ita_attention(q_q, cache["k"], cache["v"], s_q,
-                        cache["k_scale"], cache["v_scale"], s_out,
-                        q_offset=q_offset(cache, 1), kv_len=valid_len(cache),
-                        causal=causal, window=window, mode="decode",
-                        kv_layout="bsgd", block_kv=block_kv,
-                        interpret=interpret)
+    k_q = quantize_with_scale(k_new, cache.k_scale[None, None, :, None])
+    v_q = quantize_with_scale(v_new, cache.v_scale[None, None, :, None])
+    cache = cache.decode_append(k_q, v_q)
+    spec = AttentionSpec(mode="decode", impl="ita", causal=causal,
+                         window=window, layout="bhsd_bsgd",
+                         scale_kind="per_head", out_dtype="int8",
+                         q_len=q_q.shape[2])
+    out = dispatch(q_q, cache.k, cache.v, spec=spec,
+                   scales=QuantScales(s_q, cache.k_scale, cache.v_scale,
+                                      s_out),
+                   q_offset=cache.q_offset(1), kv_len=cache.valid_len(),
+                   block_kv=block_kv, interpret=interpret)
     return out, cache

@@ -1,0 +1,286 @@
+"""The unified attention engine: spec validation, capability registry,
+and the cross-backend parity sweep.
+
+Coverage contract (ISSUE 2 acceptance):
+- every registered backend's ``supports()`` verdict is exercised in both
+  directions (an eligible spec and a rejecting spec with a reason),
+- ineligible (spec, backend) pairs raise ``BackendUnsupported`` carrying
+  the backend's stated reason,
+- the parity sweep across ``list_backends(spec)`` is bit-exact for
+  causal, sliding-window, GQA and per-head-scale decode specs.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import attention as ATT
+from repro.kernels.common import resolve_interpret
+
+rng = np.random.default_rng(0)
+
+S_Q, S_OUT = np.float32(0.05), np.float32(0.02)
+
+
+def _i8(*shape):
+    return rng.integers(-128, 128, shape, dtype=np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Spec / scales validation
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_bad_enums_and_combinations():
+    with pytest.raises(ValueError, match="mode"):
+        ATT.AttentionSpec(mode="predict")
+    with pytest.raises(ValueError, match="layout"):
+        ATT.AttentionSpec(layout="bhds")
+    with pytest.raises(ValueError, match="int8"):
+        ATT.AttentionSpec(impl="float", out_dtype="int8")
+    with pytest.raises(ValueError, match="GQA"):
+        ATT.AttentionSpec(n_heads=6, n_kv_heads=4)
+    with pytest.raises(ValueError, match="window"):
+        ATT.AttentionSpec(window=-1)
+
+
+def test_dispatch_validates_shapes_against_spec():
+    q = jnp.asarray(_i8(1, 4, 8, 16))                 # bhsd
+    k = v = jnp.asarray(_i8(1, 3, 8, 16))             # 3 kv heads !| 4
+    spec = ATT.AttentionSpec(mode="prefill", impl="ita", layout="bhsd")
+    sc = ATT.QuantScales.per_tensor(S_Q, s_out=S_OUT)
+    with pytest.raises(ValueError, match="GQA"):
+        ATT.dispatch(q, k, v, spec=spec, scales=sc)
+    with pytest.raises(ValueError, match="n_heads"):
+        ATT.dispatch(q, jnp.asarray(_i8(1, 2, 8, 16)),
+                     jnp.asarray(_i8(1, 2, 8, 16)),
+                     spec=spec.replace(n_heads=8), scales=sc)
+    with pytest.raises(ValueError, match="QuantScales"):
+        ATT.dispatch(q, jnp.asarray(_i8(1, 2, 8, 16)),
+                     jnp.asarray(_i8(1, 2, 8, 16)), spec=spec)
+
+
+def test_quantscales_pytree_and_require():
+    sc = ATT.QuantScales.from_params(
+        {"s_q": jnp.asarray(0.1), "s_k": jnp.asarray(0.2)})
+    assert sc.s_v is None and sc.s_out is None
+    import jax
+    assert len(jax.tree.leaves(sc)) == 2     # None leaves drop out
+    with pytest.raises(ValueError, match="s_out"):
+        sc.require("s_q", "s_out")
+    assert sc.require("s_q", "s_k") is sc
+
+
+# ---------------------------------------------------------------------------
+# Capability matrix: every backend says yes somewhere, no somewhere (with
+# a reason)
+# ---------------------------------------------------------------------------
+
+# One eligible spec and one rejected spec per backend.
+_ELIGIBLE = {
+    "float_xla": dict(mode="prefill", impl="float"),
+    "ita_chunked_xla": dict(mode="train", impl="ita", softcap=30.0),
+    "ita_onepass_pallas": dict(mode="prefill", impl="ita", layout="bhsd",
+                               out_dtype="int8"),
+    "ita_twopass_pallas": dict(mode="prefill", impl="ita", layout="bhsd",
+                               out_dtype="int8"),
+    "ita_decode_pallas": dict(mode="decode", impl="ita", layout="bhsd_bsgd",
+                              scale_kind="per_head", out_dtype="int8",
+                              q_len=1),
+    "ita_direct_xla": dict(mode="decode", impl="ita", softcap=30.0,
+                           q_len=16),
+    "ibert_xla": dict(mode="decode", impl="ibert", q_len=1),
+}
+
+_REJECTED = {
+    "float_xla": dict(mode="prefill", impl="ita"),
+    "ita_chunked_xla": dict(mode="decode", impl="ita", q_len=1),
+    "ita_onepass_pallas": dict(mode="prefill", impl="ita", softcap=30.0),
+    "ita_twopass_pallas": dict(mode="decode", impl="ita", q_len=1),
+    "ita_decode_pallas": dict(mode="decode", impl="ita", q_len=64),
+    "ita_direct_xla": dict(mode="prefill", impl="ita"),
+    "ibert_xla": dict(mode="train", impl="ibert"),
+}
+
+
+def test_capability_tables_cover_every_registered_backend():
+    names = set(ATT.list_backends())
+    assert names == set(_ELIGIBLE) == set(_REJECTED)
+
+
+@pytest.mark.parametrize("name", sorted(_ELIGIBLE))
+def test_supports_verdicts_both_ways(name):
+    b = ATT.get_backend(name)
+    ok = b.supports(ATT.AttentionSpec(**_ELIGIBLE[name]))
+    assert ok is True, f"{name} should accept {_ELIGIBLE[name]}: {ok}"
+    no = b.supports(ATT.AttentionSpec(**_REJECTED[name]))
+    assert isinstance(no, str) and no, \
+        f"{name} should reject {_REJECTED[name]} with a reason"
+
+
+@pytest.mark.parametrize("name", sorted(_REJECTED))
+def test_ineligible_pair_raises_with_stated_reason(name):
+    spec = ATT.AttentionSpec(**_REJECTED[name])
+    reason = ATT.get_backend(name).supports(spec)
+    q = jnp.asarray(_i8(1, 2, 8, 16))
+    with pytest.raises(ATT.BackendUnsupported) as exc:
+        ATT.dispatch(q, q, q, spec=spec,
+                     scales=ATT.QuantScales.per_tensor(S_Q, s_out=S_OUT),
+                     backend=name)
+    assert name in str(exc.value) and reason in str(exc.value)
+
+
+def test_dispatch_with_no_eligible_backend_lists_all_verdicts():
+    # softcapped per-head decode in kernel layout: kernels refuse the
+    # softcap, the XLA fallbacks refuse the layout/scales
+    spec = ATT.AttentionSpec(mode="decode", impl="ita", layout="bhsd",
+                             scale_kind="per_head", softcap=30.0, q_len=1)
+    assert ATT.list_backends(spec) == []
+    q = jnp.asarray(_i8(1, 2, 8, 16))
+    with pytest.raises(ATT.BackendUnsupported, match="no registered"):
+        ATT.dispatch(q, q, q, spec=spec,
+                     scales=ATT.QuantScales.per_tensor(S_Q, s_out=S_OUT))
+
+
+def test_priority_order_and_introspection():
+    # model-layout ita prefill: streaming XLA wins, kernels stay eligible
+    prefill = ATT.AttentionSpec(mode="prefill", impl="ita")
+    assert ATT.list_backends(prefill)[0] == "ita_chunked_xla"
+    assert "ita_onepass_pallas" in ATT.list_backends(prefill)
+    # engine decode (cache-native layout + per-head scales): fused decode
+    decode = ATT.AttentionSpec(mode="decode", impl="ita",
+                               layout="bhsd_bsgd", scale_kind="per_head",
+                               out_dtype="int8", q_len=1)
+    eligible = ATT.list_backends(decode)
+    assert eligible[0] == "ita_decode_pallas"
+    assert {ATT.get_backend(n).family for n in eligible} == {"ita_fused"}
+    # float: exactly the float baseline
+    assert ATT.list_backends(
+        ATT.AttentionSpec(mode="prefill", impl="float")) == ["float_xla"]
+    reasons = ATT.backend_reasons(prefill)
+    assert set(reasons) == set(ATT.list_backends())
+    assert all(v is True or (isinstance(v, str) and v)
+               for v in reasons.values())
+
+
+def test_register_custom_backend_round_trip():
+    calls = []
+
+    def run(q, k, v, spec, scales, **kw):
+        calls.append(spec)
+        return q
+
+    be = ATT.Backend(name="null_test_backend", family="test",
+                     supports=lambda spec: spec.impl == "ita" or "ita only",
+                     run=run, description="test stub")
+    ATT.register_backend(be)
+    try:
+        spec = ATT.AttentionSpec(mode="prefill", impl="ita", layout="bhsd")
+        assert "null_test_backend" in ATT.list_backends(spec)
+        q = jnp.asarray(_i8(1, 2, 8, 16))
+        out = ATT.dispatch(q, q, q, spec=spec,
+                           scales=ATT.QuantScales.per_tensor(S_Q),
+                           backend="null_test_backend")
+        assert out is q and len(calls) == 1
+    finally:
+        from repro.attention import registry
+        registry._REGISTRY.pop("null_test_backend", None)
+
+
+# ---------------------------------------------------------------------------
+# Parity sweep: every eligible backend for a decode spec is bit-exact
+# ---------------------------------------------------------------------------
+
+PARITY_SPECS = [
+    # (hq, hkv, causal, window) — all with per-head scales, the engine's
+    # native decode grid; together they cover causal, sliding-window, GQA
+    # and per-head-scale decode specs.
+    pytest.param(4, 4, True, 0, id="causal"),
+    pytest.param(4, 4, True, 48, id="sliding-window"),
+    pytest.param(4, 2, True, 0, id="gqa"),
+    pytest.param(4, 2, True, 48, id="gqa+window+per-head"),
+]
+
+
+@pytest.mark.parametrize("hq,hkv,causal,window", PARITY_SPECS)
+def test_parity_sweep_eligible_backends_bit_exact(hq, hkv, causal, window):
+    b, d, skv = 2, 32, 128
+    q = jnp.asarray(_i8(b, hq, 1, d))
+    k = jnp.asarray(_i8(b, hkv, skv, d))
+    v = jnp.asarray(_i8(b, hkv, skv, d))
+    sk = jnp.asarray(rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32))
+    sv = jnp.asarray(rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32))
+    spec = ATT.AttentionSpec(mode="decode", impl="ita", causal=causal,
+                             window=window, layout="bhsd",
+                             scale_kind="per_head", out_dtype="int8",
+                             q_len=1)
+    scales = ATT.QuantScales(S_Q, sk, sv, S_OUT)
+    eligible = ATT.list_backends(spec)
+    assert len(eligible) >= 2, eligible       # a sweep, not a singleton
+    families = {ATT.get_backend(n).family for n in eligible}
+    assert families == {"ita_fused"}, families
+
+    outs = {name: np.asarray(ATT.dispatch(
+        q, k, v, spec=spec, scales=scales, q_offset=skv - 1, kv_len=skv,
+        backend=name, block_q=8, block_kv=64)) for name in eligible}
+    ref_name, ref = next(iter(outs.items()))
+    for name, out in outs.items():
+        np.testing.assert_array_equal(
+            out, ref, err_msg=f"{name} != {ref_name} for {spec}")
+
+
+def test_parity_same_family_holds_under_auto_dispatch():
+    """Auto dispatch (no override) lands on the first eligible backend and
+    matches the explicit sweep."""
+    b, hq, hkv, d, skv = 1, 4, 2, 32, 128
+    q = jnp.asarray(_i8(b, hq, 1, d))
+    k = jnp.asarray(_i8(b, hkv, skv, d))
+    v = jnp.asarray(_i8(b, hkv, skv, d))
+    spec = ATT.AttentionSpec(mode="decode", impl="ita", window=48,
+                             layout="bhsd", scale_kind="per_head",
+                             out_dtype="int8", q_len=1)
+    scales = ATT.QuantScales(S_Q, jnp.full((hkv,), 0.05, jnp.float32),
+                             jnp.full((hkv,), 0.04, jnp.float32), S_OUT)
+    auto = ATT.dispatch(q, k, v, spec=spec, scales=scales,
+                        q_offset=skv - 1, kv_len=skv, block_kv=64)
+    first = ATT.dispatch(q, k, v, spec=spec, scales=scales,
+                         q_offset=skv - 1, kv_len=skv, block_kv=64,
+                         backend=ATT.list_backends(spec)[0])
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(first))
+
+
+# ---------------------------------------------------------------------------
+# Pallas interpret-mode resolution (satellite: no silent interpret on
+# capable hardware)
+# ---------------------------------------------------------------------------
+
+def test_resolve_interpret_auto_env_and_explicit(monkeypatch):
+    monkeypatch.delenv("ITA_PALLAS_INTERPRET", raising=False)
+    import jax
+    expected = jax.default_backend() not in ("tpu", "gpu")
+    assert resolve_interpret(None) is expected      # auto: platform-driven
+    monkeypatch.setenv("ITA_PALLAS_INTERPRET", "1")
+    assert resolve_interpret(None) is True
+    monkeypatch.setenv("ITA_PALLAS_INTERPRET", "0")
+    assert resolve_interpret(None) is False
+    monkeypatch.setenv("ITA_PALLAS_INTERPRET", "false")
+    assert resolve_interpret(None) is False
+    # explicit argument beats the env override
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+
+
+def test_engine_runs_with_env_forced_interpret(monkeypatch):
+    """The override reaches the kernels through dispatch (smoke)."""
+    monkeypatch.setenv("ITA_PALLAS_INTERPRET", "1")
+    assert os.environ["ITA_PALLAS_INTERPRET"] == "1"
+    q = jnp.asarray(_i8(1, 2, 1, 32))
+    kv = jnp.asarray(_i8(1, 2, 128, 32))
+    spec = ATT.AttentionSpec(mode="decode", impl="ita", layout="bhsd",
+                             out_dtype="int8", q_len=1)
+    out = ATT.dispatch(q, kv, kv, spec=spec,
+                       scales=ATT.QuantScales.per_tensor(S_Q, s_out=S_OUT),
+                       q_offset=127, kv_len=128,
+                       backend="ita_decode_pallas")
+    assert out.shape == (1, 2, 1, 32) and out.dtype == jnp.int8

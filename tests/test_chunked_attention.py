@@ -1,20 +1,17 @@
-"""Streaming chunked attention vs direct attention equivalence."""
+"""Streaming chunked attention vs direct attention equivalence, driven
+through the unified engine where a backend choice is being compared."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import get_config
+from repro import attention as ATT
+from repro.attention.chunked import streaming_attention
 from repro.kernels.ita_attention.ref import float_attention_ref
-from repro.models.chunked_attention import streaming_attention
 
 KEY = jax.random.PRNGKey(0)
 rng = np.random.default_rng(0)
-
-
-def _cfg(**kw):
-    return get_config("phi3-mini-3.8b", smoke=True, **kw)
 
 
 @pytest.mark.parametrize("sq,skv,causal,window", [
@@ -26,9 +23,8 @@ def test_float_streaming_matches_direct(sq, skv, causal, window):
     q = rng.normal(0, 1, (b, sq, h, hd)).astype(np.float32)
     k = rng.normal(0, 1, (b, skv, g, hd)).astype(np.float32)
     v = rng.normal(0, 1, (b, skv, g, hd)).astype(np.float32)
-    cfg = _cfg()
     out = streaming_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                              impl="float", cfg=cfg, scale=hd ** -0.5,
+                              impl="float", scale=hd ** -0.5,
                               causal=causal, window=window, q_chunk=32,
                               kv_chunk=32)
     # direct reference with KV head broadcast
@@ -41,42 +37,50 @@ def test_float_streaming_matches_direct(sq, skv, causal, window):
     np.testing.assert_allclose(out_r, np.asarray(ref), atol=2e-5)
 
 
-def test_ita_int_streaming_matches_model_direct():
-    """ita_int chunked result ~= the direct integer attention used by the
-    decode path (same adaptive DI; streaming corrections differ by the
-    documented floor interaction only)."""
-    from repro.models.attention import attention_core
-    cfg = _cfg(attention_impl="ita")
+@pytest.mark.parametrize("softcap", [0.0, 2.0])
+def test_ita_int_streaming_matches_direct_backend(softcap):
+    """ita_chunked_xla result ~= ita_direct_xla on the same inputs (same
+    adaptive DI; streaming corrections differ by the documented floor
+    interaction only) — both driven through the registry by name. The
+    softcapped case pins the chunked int branch's tanh-before-requant
+    against the direct path's (the gemma2-ita semantics)."""
     b, s, h, g, hd = 1, 64, 4, 4, 16
-    params = {"s_q": jnp.asarray(0.05), "s_k": jnp.asarray(0.05),
-              "s_v": jnp.asarray(0.05)}
+    scales = ATT.QuantScales.per_tensor(jnp.asarray(0.05))
     q = rng.normal(0, 0.5, (b, s, h, hd)).astype(np.float32)
     k = rng.normal(0, 0.5, (b, s, g, hd)).astype(np.float32)
     v = rng.normal(0, 0.5, (b, s, g, hd)).astype(np.float32)
-    out_chunk = attention_core(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                               cfg=cfg, params=params, causal=True, window=0,
-                               mode="prefill")
-    # direct (decode-style) path on the same inputs
-    out_direct = attention_core(jnp.asarray(q), jnp.asarray(k),
-                                jnp.asarray(v), cfg=cfg, params=params,
-                                causal=True, window=0, mode="decode")
+    out_chunk = ATT.dispatch(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        spec=ATT.AttentionSpec(mode="prefill", impl="ita", q_len=s,
+                               softcap=softcap),
+        scales=scales, backend="ita_chunked_xla")
+    out_direct = ATT.dispatch(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        spec=ATT.AttentionSpec(mode="decode", impl="ita", q_len=s,
+                               softcap=softcap),
+        scales=scales, backend="ita_direct_xla")
     a, b_ = np.asarray(out_chunk, np.float32), np.asarray(out_direct,
                                                           np.float32)
     rel = np.abs(a - b_).mean() / (np.abs(b_).mean() + 1e-9)
     assert rel < 0.08, rel
+    if softcap:
+        # the cap actually bites: capped and uncapped logit grids differ
+        out_nocap = ATT.dispatch(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            spec=ATT.AttentionSpec(mode="prefill", impl="ita", q_len=s),
+            scales=scales, backend="ita_chunked_xla")
+        assert np.abs(a - np.asarray(out_nocap, np.float32)).max() > 0
 
 
 def test_scan_unroll_equivalence():
-    cfg_r = _cfg()
-    cfg_u = _cfg(scan_unroll=True)
     b, s, h, hd = 1, 64, 2, 16
     q = rng.normal(0, 1, (b, s, h, hd)).astype(np.float32)
     k = rng.normal(0, 1, (b, s, h, hd)).astype(np.float32)
     v = rng.normal(0, 1, (b, s, h, hd)).astype(np.float32)
     o1 = streaming_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                             impl="float", cfg=cfg_r, scale=0.25,
+                             impl="float", scale=0.25,
                              causal=True, q_chunk=16, kv_chunk=16)
     o2 = streaming_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                             impl="float", cfg=cfg_u, scale=0.25,
+                             impl="float", scale=0.25, scan_unroll=True,
                              causal=True, q_chunk=16, kv_chunk=16)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

@@ -1,11 +1,11 @@
 """Int8 KV-cache decode engine: parity + ring-buffer semantics.
 
 The acceptance property: token-by-token decode through the int8 ring
-buffer (``repro.runtime.kv_cache`` + the decode-shaped Pallas kernel) is
-**bit-identical** to the matching rows of one-shot prefill
-``ita_attention`` — causal, sliding-window and GQA — because the decode
-kernel replays the exact streaming-DA tile schedule of the onepass kernel
-over the same block boundaries.
+buffer (``repro.attention.KVCacheState`` + the decode-shaped Pallas
+kernel behind ``ita_decode_pallas``) is **bit-identical** to the matching
+rows of one-shot ``ita_onepass_pallas`` prefill — causal, sliding-window
+and GQA — because the decode kernel replays the exact streaming-DA tile
+schedule of the onepass kernel over the same block boundaries.
 """
 
 import jax
@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ita_attention.ops import ita_attention
+from repro import attention as ATT
 from repro.runtime import kv_cache as KV
 
 rng = np.random.default_rng(0)
@@ -24,6 +24,21 @@ S_Q, S_OUT = np.float32(0.05), np.float32(0.02)
 
 def _i8(*shape):
     return rng.integers(-128, 128, shape, dtype=np.int8)
+
+
+def _fused(q, k, v, s_k, s_v, *, kind, causal, window, q_offset=0,
+           kv_len=None, block_q=128, block_kv=BKV):
+    """int8 kernel-layout dispatch through the registry."""
+    spec = ATT.AttentionSpec(
+        mode="decode" if kind == "decode" else "prefill", impl="ita",
+        causal=causal, window=window, layout="bhsd",
+        scale_kind="per_head", out_dtype="int8",
+        q_len=q.shape[2] if kind == "decode" else None)
+    return ATT.dispatch(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), spec=spec,
+        scales=ATT.QuantScales(S_Q, s_k, s_v, S_OUT), q_offset=q_offset,
+        kv_len=kv_len, backend=f"ita_{kind}_pallas", block_q=block_q,
+        block_kv=block_kv)
 
 
 @pytest.mark.parametrize("hq,hkv,causal,window", [
@@ -39,27 +54,27 @@ def test_decode_bit_identical_to_oneshot_prefill(hq, hkv, causal, window):
     sk = rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32)
     sv = rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32)
 
-    full = np.asarray(ita_attention(
-        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), S_Q,
-        jnp.asarray(sk), jnp.asarray(sv), S_OUT, causal=causal,
-        window=window, mode="onepass", block_q=32, block_kv=BKV))
+    full = np.asarray(_fused(q, k, v, jnp.asarray(sk), jnp.asarray(sv),
+                             kind="onepass", causal=causal, window=window,
+                             block_q=32))
 
     # ring cache in (B, S, G, hd) layout, sized to the full sequence
     cache = KV.init_cache(b, S, hkv, d, per_head_scales=True)
-    cache = dict(cache, k_scale=jnp.asarray(sk), v_scale=jnp.asarray(sv))
-    cache = KV.prefill_write(cache, jnp.asarray(k[:, :, :PREFILL].transpose(0, 2, 1, 3)),
-                             jnp.asarray(v[:, :, :PREFILL].transpose(0, 2, 1, 3)))
+    cache = cache.with_scales(jnp.asarray(sk), jnp.asarray(sv))
+    cache = cache.prefill_write(
+        jnp.asarray(k[:, :, :PREFILL].transpose(0, 2, 1, 3)),
+        jnp.asarray(v[:, :, :PREFILL].transpose(0, 2, 1, 3)))
 
     for t in range(PREFILL, S):
-        cache = KV.decode_append(
-            cache, jnp.asarray(k[:, :, t:t + 1].transpose(0, 2, 1, 3)),
+        cache = cache.decode_append(
+            jnp.asarray(k[:, :, t:t + 1].transpose(0, 2, 1, 3)),
             jnp.asarray(v[:, :, t:t + 1].transpose(0, 2, 1, 3)))
-        out = ita_attention(
-            jnp.asarray(q[:, :, t:t + 1]), cache["k"].transpose(0, 2, 1, 3),
-            cache["v"].transpose(0, 2, 1, 3), S_Q, cache["k_scale"],
-            cache["v_scale"], S_OUT, q_offset=KV.q_offset(cache, 1),
-            kv_len=KV.valid_len(cache), causal=causal, window=window,
-            mode="decode", block_kv=BKV)
+        out = _fused(q[:, :, t:t + 1],
+                     np.asarray(cache.k.transpose(0, 2, 1, 3)),
+                     np.asarray(cache.v.transpose(0, 2, 1, 3)),
+                     cache.k_scale, cache.v_scale, kind="decode",
+                     causal=causal, window=window,
+                     q_offset=cache.q_offset(1), kv_len=cache.valid_len())
         np.testing.assert_array_equal(np.asarray(out)[:, :, 0],
                                       full[:, :, t],
                                       err_msg=f"decode step t={t}")
@@ -89,27 +104,24 @@ def test_decode_attend_engine_matches_oneshot():
         outs.append(np.asarray(out)[:, :, 0])
 
     # one-shot over the cache's own int8 contents + frozen scales
-    full = np.asarray(ita_attention(
-        q8, cache["k"].transpose(0, 2, 1, 3),
-        cache["v"].transpose(0, 2, 1, 3), S_Q, cache["k_scale"],
-        cache["v_scale"], S_OUT, causal=True, mode="onepass",
-        block_q=32, block_kv=BKV))
+    full = np.asarray(_fused(
+        np.asarray(q8), np.asarray(cache.k.transpose(0, 2, 1, 3)),
+        np.asarray(cache.v.transpose(0, 2, 1, 3)), cache.k_scale,
+        cache.v_scale, kind="onepass", causal=True, window=0, block_q=32))
     np.testing.assert_array_equal(np.stack(outs, axis=2),
                                   full[:, :, PREFILL:])
 
 
 def test_decode_mode_matches_onepass_same_call():
-    """mode='decode' ≡ mode='onepass' for a single query at any prefix."""
+    """ita_decode_pallas ≡ ita_onepass_pallas for a single query at any
+    prefix — the family invariant the registry's parity sweep rests on."""
     b, h, d, cap = 2, 4, 32, 128
     q = _i8(b, h, 1, d)
     k, v = _i8(b, h, cap, d), _i8(b, h, cap, d)
     for kv_len in (1, 63, 64, 65, 128):
-        args = (jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                S_Q, S_Q, S_Q, S_OUT)
-        kw = dict(q_offset=kv_len - 1, kv_len=kv_len, causal=True,
-                  block_kv=64)
-        a = ita_attention(*args, mode="decode", **kw)
-        b_ = ita_attention(*args, mode="onepass", block_q=8, **kw)
+        kw = dict(causal=True, window=0, q_offset=kv_len - 1, kv_len=kv_len)
+        a = _fused(q, k, v, S_Q, S_Q, kind="decode", **kw)
+        b_ = _fused(q, k, v, S_Q, S_Q, kind="onepass", block_q=8, **kw)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
 
 
@@ -119,31 +131,31 @@ def test_ring_buffer_eviction_and_tracking():
     toks = _i8(b, 24, g, hd)
 
     cache = KV.init_cache(b, cap, g, hd)
-    cache = KV.prefill_write(cache, jnp.asarray(toks[:, :12]),
-                             jnp.asarray(toks[:, :12]))
-    assert int(cache["pos"]) == 12
-    assert int(KV.valid_len(cache)) == 12
-    assert int(KV.q_offset(cache, 1)) == 11
-    np.testing.assert_array_equal(np.asarray(cache["k"][:, :12]),
+    cache = cache.prefill_write(jnp.asarray(toks[:, :12]),
+                                jnp.asarray(toks[:, :12]))
+    assert int(cache.pos) == 12
+    assert int(cache.valid_len()) == 12
+    assert int(cache.q_offset(1)) == 11
+    np.testing.assert_array_equal(np.asarray(cache.k[:, :12]),
                                   toks[:, :12])
 
     for t in range(12, 24):
-        cache = KV.decode_append(cache, jnp.asarray(toks[:, t:t + 1]),
-                                 jnp.asarray(toks[:, t:t + 1]))
-    assert int(cache["pos"]) == 24
-    assert int(KV.valid_len(cache)) == cap
-    assert int(KV.q_offset(cache, 1)) == cap - 1
+        cache = cache.decode_append(jnp.asarray(toks[:, t:t + 1]),
+                                    jnp.asarray(toks[:, t:t + 1]))
+    assert int(cache.pos) == 24
+    assert int(cache.valid_len()) == cap
+    assert int(cache.q_offset(1)) == cap - 1
     # token t lives in slot t % cap; tokens 8..23 survive
     for t in range(8, 24):
-        np.testing.assert_array_equal(np.asarray(cache["k"][:, t % cap]),
+        np.testing.assert_array_equal(np.asarray(cache.k[:, t % cap]),
                                       toks[:, t])
 
     # long prefill (> capacity) keeps only the tail, same slot rule
-    cache2 = KV.prefill_write(KV.init_cache(b, cap, g, hd),
-                              jnp.asarray(toks), jnp.asarray(toks))
-    assert int(cache2["pos"]) == 24
+    cache2 = KV.init_cache(b, cap, g, hd).prefill_write(
+        jnp.asarray(toks), jnp.asarray(toks))
+    assert int(cache2.pos) == 24
     for t in range(8, 24):
-        np.testing.assert_array_equal(np.asarray(cache2["k"][:, t % cap]),
+        np.testing.assert_array_equal(np.asarray(cache2.k[:, t % cap]),
                                       toks[:, t])
 
 
@@ -152,16 +164,37 @@ def test_multi_token_append_wraps_ring_boundary():
     not clamp (dynamic_update_slice clamps; the append is per-token)."""
     b, g, hd, cap = 1, 2, 4, 16
     toks = _i8(b, 19, g, hd)
-    cache = KV.prefill_write(KV.init_cache(b, cap, g, hd),
-                             jnp.asarray(toks[:, :15]),
-                             jnp.asarray(toks[:, :15]))
+    cache = KV.init_cache(b, cap, g, hd).prefill_write(
+        jnp.asarray(toks[:, :15]), jnp.asarray(toks[:, :15]))
     # 4-token burst from pos=15: slots 15, 0, 1, 2
-    cache = KV.decode_append(cache, jnp.asarray(toks[:, 15:19]),
-                             jnp.asarray(toks[:, 15:19]))
-    assert int(cache["pos"]) == 19
+    cache = cache.decode_append(jnp.asarray(toks[:, 15:19]),
+                                jnp.asarray(toks[:, 15:19]))
+    assert int(cache.pos) == 19
     for t in range(3, 19):          # tokens 3..18 survive
-        np.testing.assert_array_equal(np.asarray(cache["k"][:, t % cap]),
+        np.testing.assert_array_equal(np.asarray(cache.k[:, t % cap]),
                                       toks[:, t], err_msg=f"token {t}")
+
+
+def test_kv_cache_state_is_pytree():
+    """KVCacheState flows through tree ops / eval_shape / jit like the
+    dicts it replaced (scan/shard/donate-compatible)."""
+    cache = KV.init_cache(2, 8, 2, 4, per_head_scales=True)
+    leaves = jax.tree.leaves(cache)
+    assert len(leaves) == 5            # k, v, pos, k_scale, v_scale
+    stacked = jax.tree.map(lambda a: jnp.zeros((3,) + a.shape, a.dtype),
+                           cache)
+    assert isinstance(stacked, KV.KVCacheState)
+    assert stacked.k.shape == (3, 2, 8, 2, 4)
+    shp = jax.eval_shape(lambda: KV.init_cache(2, 8, 2, 4))
+    assert isinstance(shp, KV.KVCacheState) and shp.k_scale is None
+
+    @jax.jit
+    def step(c, t):
+        return c.decode_append(t, t)
+
+    tok = jnp.ones((2, 1, 2, 4), jnp.int8)
+    out = step(cache, tok)
+    assert int(out.pos) == 1 and isinstance(out, KV.KVCacheState)
 
 
 def test_per_head_quantization_roundtrip():

@@ -1,15 +1,17 @@
 """Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret mode; integer results must match EXACTLY)."""
+(interpret mode; integer results must match EXACTLY). Kernels are driven
+through the public engine (``repro.attention.dispatch`` with explicit
+``backend=`` overrides) — the registry is the only entry point."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import attention as ATT
 from repro.core.quant import EPS_MAX
 from repro.kernels.int8_matmul.ops import int8_matmul
 from repro.kernels.int8_matmul.ref import int8_matmul_ref
 from repro.kernels.ita_attention import ref as AR
-from repro.kernels.ita_attention.ops import ita_attention
 from repro.kernels.ita_softmax.ops import ita_softmax
 from repro.kernels.ita_softmax.ref import ita_softmax_ref
 
@@ -18,6 +20,24 @@ rng = np.random.default_rng(0)
 
 def _i8(*shape):
     return rng.integers(-128, 128, shape, dtype=np.int8)
+
+
+def fused(q, k, v, s_q, s_k, s_v, s_out, *, kind, causal=True, window=0,
+          q_offset=0, kv_len=None, adaptive=True, block_q=128,
+          block_kv=128):
+    """Drive one fused Pallas backend via the registry (kernel layout,
+    int8 in / int8-at-s_out out)."""
+    spec = ATT.AttentionSpec(
+        mode="decode" if kind == "decode" else "prefill", impl="ita",
+        causal=causal, window=window,
+        softmax="adaptive" if adaptive else "paper", layout="bhsd",
+        out_dtype="int8",
+        q_len=q.shape[2] if kind == "decode" else None)
+    return ATT.dispatch(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), spec=spec,
+        scales=ATT.QuantScales(s_q, s_k, s_v, s_out), q_offset=q_offset,
+        kv_len=kv_len, backend=f"ita_{kind}_pallas", block_q=block_q,
+        block_kv=block_kv)
 
 
 # ---------------------------------------------------------------------------
@@ -91,7 +111,7 @@ def _attn_ref(q, k, v, causal, window, mode, adaptive, bkv, q_offset=0):
         jnp.asarray(k.reshape(b * h, skv, d)),
         jnp.asarray(v.reshape(b * h, skv, d)),
         lmult, omult, skv, causal=causal, window=window, adaptive=adaptive,
-        block_kv=bkv, mode=mode, q_offset=q_offset)
+        block_kv=bkv, kind=mode, q_offset=q_offset)
 
 
 @pytest.mark.parametrize("mode", ["onepass", "twopass"])
@@ -102,9 +122,8 @@ def _attn_ref(q, k, v, causal, window, mode, adaptive, bkv, q_offset=0):
 def test_ita_attention_sweep(mode, causal, window, sq, skv):
     b, h, d = 2, 2, 64
     q, k, v = _i8(b, h, sq, d), _i8(b, h, skv, d), _i8(b, h, skv, d)
-    out = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                        SQ, SQ, SQ, SO, causal=causal, window=window,
-                        mode=mode, adaptive=True, block_q=32, block_kv=64)
+    out = fused(q, k, v, SQ, SQ, SQ, SO, causal=causal, window=window,
+                kind=mode, adaptive=True, block_q=32, block_kv=64)
     ref = _attn_ref(q, k, v, causal, window, mode, True, 64)
     np.testing.assert_array_equal(
         np.asarray(out).reshape(b * h, sq, d), np.asarray(ref))
@@ -113,9 +132,8 @@ def test_ita_attention_sweep(mode, causal, window, sq, skv):
 def test_ita_attention_gqa_and_decode():
     b, hq, hkv, d, skv = 1, 8, 2, 64, 512
     q, k, v = _i8(b, hq, 1, d), _i8(b, hkv, skv, d), _i8(b, hkv, skv, d)
-    out = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                        SQ, SQ, SQ, SO, q_offset=skv - 1, causal=True,
-                        mode="onepass", block_q=8, block_kv=128)
+    out = fused(q, k, v, SQ, SQ, SQ, SO, q_offset=skv - 1, causal=True,
+                kind="onepass", block_q=8, block_kv=128)
     kr = np.repeat(k, 4, axis=1)
     vr = np.repeat(v, 4, axis=1)
     ref = _attn_ref(q, kr, vr, True, 0, "onepass", True, 128,
@@ -128,9 +146,8 @@ def test_twopass_matches_paper_oneshot_single_tile():
     """Single kv tile -> streaming == one-shot paper semantics exactly."""
     b, h, s, d = 1, 2, 64, 64
     q, k, v = _i8(b, h, s, d), _i8(b, h, s, d), _i8(b, h, s, d)
-    out = ita_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                        SQ, SQ, SQ, SO, causal=True, mode="twopass",
-                        adaptive=False, block_q=64, block_kv=64)
+    out = fused(q, k, v, SQ, SQ, SQ, SO, causal=True, kind="twopass",
+                adaptive=False, block_q=64, block_kv=64)
     lmult = np.float32(SQ * SQ / (np.sqrt(d) * EPS_MAX))
     ref, _ = AR.ita_attention_ref(
         jnp.asarray(q.reshape(b * h, s, d)), jnp.asarray(k.reshape(b * h, s, d)),
@@ -162,13 +179,12 @@ def test_kernel_ref_chunked_parity(hq, hkv, causal, window, kv_len):
 
     - onepass / twopass: exact (bit-identical to the streaming oracle at
       matching tile size).
-    - chunked ``ita_int`` (repro.models.chunked_attention): same DA/DI at
+    - chunked ``ita_int`` (repro.attention.chunked): same DA/DI at
       chunk granularity but clips the ``u = 128>>k`` numerator to 127 so
       A·V rides the int8 MXU — max-element terms differ by ≤ 1/128, so
       parity there is near-exact on the int8 output grid, not bitwise.
     """
-    from repro.configs.registry import get_config
-    from repro.models.chunked_attention import streaming_attention
+    from repro.attention.chunked import streaming_attention
 
     b, sq, skv, d, bkv = 2, 64, 128, 32, 64
     q = _i8(b, hq, sq, d)
@@ -185,13 +201,13 @@ def test_kernel_ref_chunked_parity(hq, hkv, causal, window, kv_len):
         jnp.asarray(kr.reshape(b * hq, skv, d)),
         jnp.asarray(vr.reshape(b * hq, skv, d)),
         lmult, omult, eff_kv, causal=causal, window=window, adaptive=True,
-        block_kv=bkv, mode="onepass")).reshape(b, hq, sq, d)
+        block_kv=bkv, kind="onepass")).reshape(b, hq, sq, d)
 
     for mode in ("onepass", "twopass"):
-        out = np.asarray(ita_attention(
-            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), SQ, SQ, SQ, SO,
-            kv_len=eff_kv, causal=causal, window=window, mode=mode,
-            adaptive=True, block_q=32, block_kv=bkv))
+        out = np.asarray(fused(
+            q, k, v, SQ, SQ, SQ, SO, kv_len=eff_kv, causal=causal,
+            window=window, kind=mode, adaptive=True, block_q=32,
+            block_kv=bkv))
         if mode == "onepass":
             np.testing.assert_array_equal(out, ref, err_msg=mode)
         else:
@@ -201,16 +217,15 @@ def test_kernel_ref_chunked_parity(hq, hkv, causal, window, kv_len):
                 jnp.asarray(vr.reshape(b * hq, skv, d)),
                 lmult, omult, eff_kv, causal=causal, window=window,
                 adaptive=True, block_kv=bkv,
-                mode="twopass")).reshape(b, hq, sq, d)
+                kind="twopass")).reshape(b, hq, sq, d)
             np.testing.assert_array_equal(out, ref2, err_msg=mode)
 
     # chunked XLA path (model layout (B,S,H,hd)); requant to the s_out grid
-    cfg = get_config("phi3-mini-3.8b", smoke=True, attention_impl="ita")
     chunk = streaming_attention(
         jnp.asarray(q.transpose(0, 2, 1, 3)),
         jnp.asarray(k.transpose(0, 2, 1, 3)),
         jnp.asarray(v.transpose(0, 2, 1, 3)),
-        impl="ita_int", cfg=cfg, scale=d ** -0.5, s_q=SQ, s_k=SQ, s_v=SQ,
+        impl="ita_int", scale=d ** -0.5, s_q=SQ, s_k=SQ, s_v=SQ,
         causal=causal, window=window, kv_len=eff_kv, q_chunk=32,
         kv_chunk=bkv)
     chunk_i8 = np.clip(np.round(np.asarray(chunk) / SO), -128, 127
@@ -231,9 +246,8 @@ def test_attention_accuracy_vs_float():
     q8 = np.clip(np.round(qf / s_act), -128, 127).astype(np.int8)
     k8 = np.clip(np.round(kf / s_act), -128, 127).astype(np.int8)
     v8 = np.clip(np.round(vf / s_act), -128, 127).astype(np.int8)
-    out8 = ita_attention(jnp.asarray(q8), jnp.asarray(k8), jnp.asarray(v8),
-                         s_act, s_act, s_act, np.float32(2.0 / 127),
-                         causal=True, mode="onepass")
+    out8 = fused(q8, k8, v8, s_act, s_act, s_act, np.float32(2.0 / 127),
+                 causal=True, kind="onepass")
     out = np.asarray(out8).astype(np.float32) * (2.0 / 127)
     ref = np.asarray(AR.float_attention_ref(
         jnp.asarray(qf.reshape(b * h, s, d)),

@@ -104,8 +104,8 @@ def test_ita_quantized_path(arch):
     assert bool(jnp.all(jnp.isfinite(ld)))
     kv_dtypes = {l.dtype for path, l in
                  jax.tree_util.tree_flatten_with_path(caches)[0]
-                 if any(getattr(k, "key", None) in ("k", "v", "k8", "v8")
-                        for k in path)}
+                 if any(getattr(k, "key", getattr(k, "name", None))
+                        in ("k", "v", "k8", "v8") for k in path)}
     assert kv_dtypes == {jnp.dtype(jnp.int8)}, kv_dtypes
 
 
