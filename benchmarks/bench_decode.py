@@ -1,14 +1,25 @@
-"""Incremental int8 KV-cache decode vs full-context recompute.
+"""Decode serving benchmarks: kernel-level cache reuse + the fused
+generation loop.
 
-Serving cost model: without a KV cache every generated token re-runs
-attention over the whole context (O(S²) per token); with the int8 ring
-buffer each token is one decode-shaped kernel call over the valid prefix
-(O(S) per token) and the cache bytes are 4x smaller than f32. Reports
-tokens/s for both at a fixed context length (CPU interpret mode —
-indicative; the structure, not the silicon, is the claim) plus the
-analytic FLOP/byte ratios that do transfer.
+Three claims, measured on the CI (CPU/interpret) configuration —
+indicative structure, not silicon numbers:
+
+1. **Cache vs recompute** (paper serving cost model): with the int8 ring
+   buffer each token is one decode-shaped kernel call over the valid
+   prefix (O(S)); without it, full-context recompute (O(S²)).
+2. **Fused loop vs per-step host loop**: one jitted ``lax.scan`` over
+   all decode steps vs one dispatch per token — the host round-trip is
+   the serving bottleneck the fused loop deletes (ISSUE 3 acceptance:
+   >= 2x tok/s at B=8, gen=128).
+3. **Ragged batch**: mixed prompt lengths decode in the same fused loop
+   through per-row kernel meta, no padding to the longest prompt.
+
+Writes ``BENCH_decode.json`` (env ``ITA_BENCH_OUT`` overrides the path):
+scenario rows plus a tok/s-vs-gen trajectory, schema-checked on every
+run so the CI ``benchmarks/run.py --smoke`` step keeps it from rotting.
 """
 
+import json
 import os
 import time
 
@@ -16,12 +27,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import ModelConfig
+from repro.models import init_model
 from repro.runtime import kv_cache as KV
+from repro.runtime.generate import generate
 
 B, HQ, HKV, D = 2, 4, 2, 64
 CTX = 128                      # context at which decode cost is measured
 BLOCK_KV = 64
 S_Q, S_OUT = np.float32(0.05), np.float32(0.02)
+
+# The fused-loop acceptance scenario (ISSUE 3): B=8, gen=128. The model
+# is deliberately small and the ring is one KV block (max_len=128,
+# window-evicting): the quantity under test is *loop overhead* — what
+# one host dispatch per token costs vs one scan for all of them — not
+# kernel compute, which the cache-vs-recompute scenarios above measure.
+GEN_CFG = ModelConfig(
+    name="bench-decode", family="dense", d_model=32, n_heads=1,
+    n_kv_heads=1, head_dim=32, d_ff=64, vocab_size=64,
+    layer_groups=((("attn",), 1),), dtype="float32", attention_impl="ita")
+GEN_BATCH, GEN_PROMPT, GEN_STEPS, GEN_MAX_LEN = 8, 16, 128, 128
+
+SCHEMA_KEYS = {"schema_version", "config", "scenarios", "trajectory"}
+SCENARIO_KEYS = {"name", "loop", "batch", "gen", "ragged", "decode_s",
+                 "tok_s"}
 
 
 def _setup():
@@ -47,12 +76,11 @@ def _time(fn, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main():
+def _kernel_scenarios(smoke):
     from repro import attention as ATT
     cache, q8, kf, vf = _setup()
     q_last = jnp.asarray(q8[:, :, CTX - 1:])
     k_last, v_last = jnp.asarray(kf[:, CTX - 1:]), jnp.asarray(vf[:, CTX - 1:])
-    smoke = bool(int(os.environ.get("ITA_BENCH_SMOKE", "0")))
 
     def cached_step():
         out, _ = KV.decode_attend(cache, q_last, k_last, v_last, S_Q, S_OUT,
@@ -93,6 +121,101 @@ def main():
     bytes_i8 = CTX * HKV * D * 2 * 1 + 2 * HKV * 4
     print(f"decode/kv_bytes_f32_vs_int8_per_layer,0,"
           f"{bytes_f32 / bytes_i8:.6g}")
+
+
+def _gen_scenario(params, prompts, *, name, loop, gen, lengths=None,
+                  iters=1):
+    """Run generate() ``iters + 1`` times (first warms the compile) and
+    report the best decode wall-clock."""
+    best = None
+    for _ in range(iters + 1):
+        res = generate(params, GEN_CFG, prompts, gen, max_len=GEN_MAX_LEN,
+                       prompt_lengths=lengths, loop=loop)
+        if best is None or res.decode_s < best.decode_s:
+            best = res
+    row = {"name": name, "loop": loop, "batch": int(prompts.shape[0]),
+           "gen": int(gen), "ragged": lengths is not None,
+           "decode_s": round(best.decode_s, 6),
+           "tok_s": round(best.decode_tok_s, 3)}
+    print(f"decode/{name},{best.decode_s / max(gen - 1, 1) * 1e6:.1f},"
+          f"{best.decode_tok_s:.6g}")
+    return row, best
+
+
+def _generation_scenarios(smoke):
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, GEN_CFG)
+    prompts = jax.random.randint(key, (GEN_BATCH, GEN_PROMPT), 0,
+                                 GEN_CFG.vocab_size)
+    iters = 2 if smoke else 4          # best-of; this container is noisy
+    scenarios = []
+
+    # acceptance pair: per-step host loop vs one fused scan dispatch
+    row_step, res_step = _gen_scenario(
+        params, prompts, name="loop_stepwise_b8_g128", loop="stepwise",
+        gen=GEN_STEPS, iters=iters)
+    row_fused, res_fused = _gen_scenario(
+        params, prompts, name="loop_fused_b8_g128", loop="fused",
+        gen=GEN_STEPS, iters=iters)
+    speedup = res_step.decode_s / max(res_fused.decode_s, 1e-9)
+    row_fused["speedup_vs_stepwise"] = round(speedup, 3)
+    print(f"decode/fused_loop_speedup,0,{speedup:.6g}")
+    assert np.array_equal(np.asarray(res_step.tokens),
+                          np.asarray(res_fused.tokens)), \
+        "fused scan loop must be bit-identical to the per-step loop"
+    scenarios += [row_step, row_fused]
+
+    # ragged: mixed prompt lengths, one fused loop, per-row kernel meta
+    lengths = jnp.asarray(
+        np.random.default_rng(1).integers(GEN_PROMPT // 2, GEN_PROMPT + 1,
+                                          GEN_BATCH), jnp.int32)
+    row_ragged, _ = _gen_scenario(
+        params, prompts, name="loop_fused_ragged_b8_g128", loop="fused",
+        gen=GEN_STEPS, lengths=lengths, iters=iters)
+    scenarios.append(row_ragged)
+
+    # tok/s trajectory over generation length (fused loop)
+    trajectory = []
+    for g in ([32] if smoke else [16, 32, 64, 128]):
+        _, res = _gen_scenario(params, prompts,
+                               name=f"loop_fused_b8_g{g}", loop="fused",
+                               gen=g, iters=1)
+        trajectory.append({"gen": int(g),
+                           "tok_s": round(res.decode_tok_s, 3)})
+    return scenarios, trajectory
+
+
+def _validate_schema(payload):
+    assert set(payload) == SCHEMA_KEYS, set(payload)
+    assert payload["schema_version"] == 1
+    assert payload["scenarios"], "no scenarios recorded"
+    for row in payload["scenarios"]:
+        missing = SCENARIO_KEYS - set(row)
+        assert not missing, f"scenario {row.get('name')} missing {missing}"
+        assert row["tok_s"] > 0, row
+    assert all({"gen", "tok_s"} <= set(p) for p in payload["trajectory"])
+
+
+def main():
+    smoke = bool(int(os.environ.get("ITA_BENCH_SMOKE", "0")))
+    _kernel_scenarios(smoke)
+    scenarios, trajectory = _generation_scenarios(smoke)
+    payload = {
+        "schema_version": 1,
+        "config": {"arch": GEN_CFG.name, "d_model": GEN_CFG.d_model,
+                   "n_layers": GEN_CFG.n_layers, "batch": GEN_BATCH,
+                   "prompt_len": GEN_PROMPT, "gen": GEN_STEPS,
+                   "max_len": GEN_MAX_LEN,
+                   "backend": jax.default_backend(), "smoke": smoke},
+        "scenarios": scenarios,
+        "trajectory": trajectory,
+    }
+    out_path = os.environ.get("ITA_BENCH_OUT", "BENCH_decode.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    with open(out_path) as f:          # round-trip: the rot guard
+        _validate_schema(json.load(f))
+    print(f"decode/artifact,0,{out_path}")
 
 
 if __name__ == "__main__":

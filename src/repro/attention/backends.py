@@ -278,9 +278,9 @@ def _fused_run(kind, q, k, v, spec, scales, q_offset, kv_len, opts):
         kv_axis = 2 if kv_native else 1
         k8 = _quantize(k, scales.s_k, kv_axis)
         v8 = _quantize(v, scales.s_v, kv_axis)
-    if kv_native and kind != "decode":
-        # onepass/twopass consume kernel-layout KV; one transpose (decode
-        # avoids it via cache-native index maps)
+    if kv_native and kind == "twopass":
+        # twopass consumes kernel-layout KV; one transpose (decode and
+        # onepass read the (B,S,G,hd) buffers via cache-native index maps)
         k8 = k8.transpose(0, 2, 1, 3)
         v8 = v8.transpose(0, 2, 1, 3)
         kv_native = False

@@ -6,12 +6,15 @@ behaviour (it is a registered dataclass pytree), but the ring-buffer
 invariants live on the type instead of in every caller's head.
 
 Layout: ``k``/``v`` are ``(B, C, G, hd)`` with capacity ``C`` a ring —
-token ``t`` lives in slot ``t % C``. ``pos`` tracks the *logical* stream
-length, from which the valid prefix (``valid_len``) and the logical
-position of new queries (``q_offset``) derive. ``k_scale``/``v_scale``
-are optional per-(kv-)head quantization scales ``(G,)`` (the decode
-engine's finer-than-QAT grid); ``None`` when the cache rides the model's
-per-tensor QAT scales.
+token ``t`` lives in slot ``t % C``. ``pos`` is **per sequence**,
+``(B,)`` int32: each row of the batch tracks its own logical stream
+length, so a ragged batch (different prompt lengths) shares one cache
+and one kernel call. The valid prefix (``valid_len``) and the logical
+position of new queries (``q_offset``) derive from ``pos`` and are
+``(B,)`` vectors that flow through ``dispatch`` into the per-row kernel
+meta. ``k_scale``/``v_scale`` are optional per-(kv-)head quantization
+scales ``(G,)`` (the decode engine's finer-than-QAT grid); ``None`` when
+the cache rides the model's per-tensor QAT scales.
 """
 
 from __future__ import annotations
@@ -27,7 +30,7 @@ import jax.numpy as jnp
 class KVCacheState:
     k: Any                      # (B, C, G, hd) int8 (or compute dtype)
     v: Any                      # (B, C, G, hd)
-    pos: Any                    # () int32 — tokens ever written
+    pos: Any                    # (B,) int32 — tokens ever written, per seq
     k_scale: Any = None         # (G,) f32 per-head scales, optional
     v_scale: Any = None         # (G,) f32
 
@@ -42,7 +45,7 @@ class KVCacheState:
         scales = (jnp.ones((n_kv_heads,), jnp.float32)
                   if per_head_scales else None)
         return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
-                   pos=jnp.zeros((), jnp.int32), k_scale=scales,
+                   pos=jnp.zeros((batch,), jnp.int32), k_scale=scales,
                    v_scale=scales)
 
     def with_scales(self, k_scale, v_scale) -> "KVCacheState":
@@ -55,30 +58,45 @@ class KVCacheState:
         return self.k.shape[1]
 
     def valid_len(self) -> jax.Array:
-        """Number of valid (non-evicted) entries in the ring."""
+        """Per-sequence number of valid (non-evicted) ring entries, (B,)."""
         return jnp.minimum(self.pos, self.capacity)
 
     def q_offset(self, s_new: int = 1) -> jax.Array:
         """Logical position of the first of the ``s_new`` query tokens
-        *just appended*, in ring coordinates: ``valid_len - s_new``.
-        While the ring has not wrapped this is the token's stream
-        position; after wrap the oldest surviving token is redefined as
-        position 0, so the newest query sits at ``C - s_new`` and the
-        sliding-window mask ``(qi - kj) < window`` keeps exactly the last
-        ``window`` slots visible."""
+        *just appended*, in ring coordinates: ``valid_len - s_new``, per
+        sequence ``(B,)``. While a ring has not wrapped this is the
+        token's stream position; after wrap the oldest surviving token is
+        redefined as position 0, so the newest query sits at ``C - s_new``
+        and the sliding-window mask ``(qi - kj) < window`` keeps exactly
+        the last ``window`` slots visible."""
         return jnp.maximum(self.valid_len() - s_new, 0)
 
     # -- writes -----------------------------------------------------------
 
-    def prefill_write(self, k_q: jax.Array, v_q: jax.Array) -> "KVCacheState":
+    def prefill_write(self, k_q: jax.Array, v_q: jax.Array,
+                      lengths: jax.Array | None = None) -> "KVCacheState":
         """Bulk-write ``S`` prefill tokens, evicting beyond capacity.
 
         ``k_q``/``v_q`` (B, S, G, hd), already quantized. Token ``t``
         lands in slot ``t % C`` (so a later ``decode_append`` continues
         the same ring); when ``S >= C`` only the last ``C`` tokens
-        survive."""
-        s = k_q.shape[1]
+        survive. ``lengths`` (B,) declares a *ragged* batch of
+        right-padded prompts: row ``b`` holds ``lengths[b] <= S`` real
+        tokens, ``pos`` starts there and the pad slots are dead weight
+        masked out by ``valid_len`` until decode appends overwrite them.
+        Ragged prefill requires ``C >= S`` (per-sequence eviction of a
+        padded prompt would need per-row rolls)."""
+        b, s = k_q.shape[:2]
         cs = self.capacity
+        if lengths is not None:
+            if s > cs:
+                raise ValueError(
+                    f"ragged prefill needs capacity >= padded prompt length "
+                    f"(got S={s} > C={cs}); grow the ring (max_len, or the "
+                    f"window for window-capped caches) or drop lengths")
+            pos = jnp.asarray(lengths, jnp.int32).reshape(b)
+        else:
+            pos = jnp.full((b,), s, jnp.int32)
         if s >= cs:
             # keep the tail, rolled so slot (t % C) holds token t
             k_t = jnp.roll(k_q[:, s - cs:], s % cs, axis=1)
@@ -86,26 +104,33 @@ class KVCacheState:
         else:
             k_t = jax.lax.dynamic_update_slice(self.k, k_q, (0, 0, 0, 0))
             v_t = jax.lax.dynamic_update_slice(self.v, v_q, (0, 0, 0, 0))
-        return dataclasses.replace(self, k=k_t, v=v_t,
-                                   pos=jnp.asarray(s, jnp.int32))
+        return dataclasses.replace(self, k=k_t, v=v_t, pos=pos)
 
     def decode_append(self, k_q: jax.Array, v_q: jax.Array) -> "KVCacheState":
-        """Append ``s_new`` decode tokens, token ``pos + i`` to slot
-        ``(pos + i) % C``. Written per token because a blockwise
-        ``dynamic_update_slice`` would *clamp* at the ring boundary
-        instead of wrapping (silently overwriting the newest surviving
-        entries); ``s_new`` is 1 in steady-state decode, <= 8 for
-        speculative bursts."""
+        """Append ``s_new`` decode tokens per sequence: row ``b``'s token
+        ``pos[b] + i`` goes to slot ``(pos[b] + i) % C``. A batched
+        scatter (``.at[batch, slots]``) rather than dynamic_update_slice:
+        slots differ per row in a ragged batch, and a blockwise slice
+        would *clamp* at the ring boundary instead of wrapping (silently
+        overwriting the newest surviving entries). ``s_new`` is 1 in
+        steady-state decode, <= 8 for speculative bursts; a burst longer
+        than the ring writes only its last ``C`` tokens (the survivors) —
+        scattering all of them would hit duplicate slots, whose winner
+        JAX leaves unspecified."""
+        b, s_new = k_q.shape[:2]
         cs = self.capacity
-        k_t, v_t = self.k, self.v
-        for i in range(k_q.shape[1]):
-            slot = (self.pos + i) % cs
-            k_t = jax.lax.dynamic_update_slice(k_t, k_q[:, i:i + 1],
-                                               (0, slot, 0, 0))
-            v_t = jax.lax.dynamic_update_slice(v_t, v_q[:, i:i + 1],
-                                               (0, slot, 0, 0))
+        start = max(s_new - cs, 0)
+        slots = (self.pos[:, None] + start
+                 + jnp.arange(s_new - start, dtype=jnp.int32)[None, :]) % cs
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        # unique_indices: consecutive slots mod C, count <= C — no
+        # collisions, so XLA can emit the cheap unordered scatter
+        k_t = self.k.at[bidx, slots].set(k_q[:, start:],
+                                         unique_indices=True)
+        v_t = self.v.at[bidx, slots].set(v_q[:, start:],
+                                         unique_indices=True)
         return dataclasses.replace(self, k=k_t, v=v_t,
-                                   pos=self.pos + k_q.shape[1])
+                                   pos=self.pos + s_new)
 
 
 jax.tree_util.register_dataclass(

@@ -30,16 +30,31 @@ def quantize_to_int8(x, scale):
 
 
 def mask(sq, skv, q_offset, causal, window, kv_len):
-    qi = q_offset + jnp.arange(sq, dtype=jnp.int32)[:, None]
+    """Validity mask. ``q_offset``/``kv_len`` may be scalars (dense) or
+    (B,) per-sequence vectors (ragged batch); the result is (sq, skv) or
+    (B, sq, skv) accordingly."""
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    kvl = None if kv_len is None else jnp.asarray(kv_len, jnp.int32)
+    if q_off.ndim or (kvl is not None and kvl.ndim):
+        b = q_off.shape[0] if q_off.ndim else kvl.shape[0]
+        q_off = jnp.broadcast_to(q_off.reshape(-1), (b,))[:, None, None]
+        if kvl is not None:
+            kvl = jnp.broadcast_to(kvl.reshape(-1), (b,))[:, None, None]
+    qi = q_off + jnp.arange(sq, dtype=jnp.int32)[:, None]
     kj = jnp.arange(skv, dtype=jnp.int32)[None, :]
-    m = jnp.ones((sq, skv), jnp.bool_)
+    m = jnp.ones(qi.shape[:-1] + (skv,), jnp.bool_)
     if causal or window > 0:
         m &= qi >= kj
     if window > 0:
         m &= (qi - kj) < window
     if kv_len is not None:
-        m &= kj < kv_len
+        m = m & (kj < kvl)
     return m
+
+
+def _lift(m):
+    """mask -> broadcastable against (B, G, M, Sq, Skv) logits."""
+    return m[:, None, None] if m.ndim == 3 else m[None, None, None]
 
 
 def gqa_logits(q, k):
@@ -62,8 +77,8 @@ def direct_float(q, k, v, *, scale, cap=0.0, causal=True, window=0,
                  q_offset=0, kv_len=None):
     """Float softmax attention; q (B,Sq,H,hd), k/v (B,Skv,G,hd) float.
     Returns (B,Sq,H,hd) in v.dtype-ish precision."""
-    m = mask(q.shape[1], k.shape[1], q_offset, causal, window,
-             kv_len)[None, None, None]
+    m = _lift(mask(q.shape[1], k.shape[1], q_offset, causal, window,
+                   kv_len))
     logits = gqa_logits(q, k) * scale
     logits = softcap(logits, cap)
     logits = jnp.where(m, logits, -jnp.inf)
@@ -80,7 +95,7 @@ def direct_int(q8, k8, v8, *, s_q, s_k, s_v, scale, impl="ita",
     softmax, int A·V. q8 (B,Sq,H,hd), k8/v8 (B,Skv,G,hd) int8.
     Returns (B,Sq,H,hd) float32 (dequantized through s_v)."""
     sq_, skv = q8.shape[1], k8.shape[1]
-    m = mask(sq_, skv, q_offset, causal, window, kv_len)[None, None, None]
+    m = _lift(mask(sq_, skv, q_offset, causal, window, kv_len))
 
     acc = gqa_logits(q8.astype(jnp.int32), k8.astype(jnp.int32))     # int32
     logits_f = acc.astype(jnp.float32) * (s_q * s_k * scale)

@@ -32,6 +32,12 @@ Integer semantics notes:
   ``ceil(kv_len/bkv)`` of the tiles do work — and the requant multipliers
   are per-(batch·head) rows so per-head cache quantization scales flow
   straight into the kernel.
+
+Ragged batches: ``kv_len``/``q_offset`` are per-(batch·head) rows of the
+``meta`` operand — every kernel row masks (and, in decode, tile-skips)
+against *its own* valid prefix, so a batch of sequences at different
+positions decodes in one call with no padding to the longest. Scalars
+broadcast to all rows (the dense case).
 """
 
 from __future__ import annotations
@@ -60,7 +66,7 @@ def _qk_logits(q_tile, k_tile, mult):
 def onepass_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
                    o_ref, m_ref, sigma_ref, acc_ref,
                    *, causal: bool, window: int, adaptive: bool,
-                   bq: int, bkv: int):
+                   bq: int, bkv: int, kv_4d: bool = False):
     i, j = pl.program_id(1), pl.program_id(2)
     last_j = pl.num_programs(2) - 1
 
@@ -70,7 +76,11 @@ def onepass_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
         sigma_ref[...] = jnp.zeros_like(sigma_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    logits = _qk_logits(q_ref[0], k_ref[0], lmult_ref[0, 0])
+    # kv_4d: cache-native (1, bkv, 1, d) blocks sliced straight out of a
+    # (B, S, G, hd) buffer by the index map — no host-side transpose.
+    k_tile = k_ref[0, :, 0] if kv_4d else k_ref[0]
+    v_tile = v_ref[0, :, 0] if kv_4d else v_ref[0]
+    logits = _qk_logits(q_ref[0], k_tile, lmult_ref[0, 0])
     valid = tile_mask(i, j, bq, bkv, causal, window, meta_ref[0, 0],
                       meta_ref[0, 1])
     u, delta = da_update(m_ref, sigma_ref, logits, valid)
@@ -79,7 +89,7 @@ def onepass_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
     corr = jnp.exp2(-delta.astype(jnp.float32))
     # u in [0, 128] — packs into uint8 on the MXU (int32 here: interpret
     # mode validates semantics; XLA emits the s8/u8 MXU path on TPU).
-    pv = jax.lax.dot_general(u, v_ref[0].astype(jnp.int32),
+    pv = jax.lax.dot_general(u, v_tile.astype(jnp.int32),
                              (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.int32)
     acc_ref[...] = acc_ref[...] * corr + pv.astype(jnp.float32)
@@ -213,34 +223,60 @@ def _row_mults(logit_mult, out_mult, bh):
     return lm, om
 
 
+def _row_meta(kv_len, q_offset, bh):
+    """Per-row ``[kv_len, q_offset]`` meta (bh, 2) int32. Scalars (the
+    dense case) broadcast to every row; (bh,) vectors pass through — the
+    ragged path, one valid prefix per (batch·head) row."""
+    kv = jnp.asarray(kv_len, jnp.int32).reshape(-1)
+    off = jnp.asarray(q_offset, jnp.int32).reshape(-1)
+    assert kv.shape[0] in (1, bh), (kv.shape, bh)
+    assert off.shape[0] in (1, bh), (off.shape, bh)
+    return jnp.stack([jnp.broadcast_to(kv, (bh,)),
+                      jnp.broadcast_to(off, (bh,))], axis=1)
+
+
 def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
                           q_offset=0, causal: bool, window: int = 0,
                           adaptive: bool = True, block_q: int = 128,
                           block_kv: int = 128, kv_rep: int = 1,
-                          interpret: bool = True):
+                          hq: int | None = None, interpret: bool = True):
     """q (BH, Sq, D) int8; k/v (BH/kv_rep, Skv, D) int8; returns (BH, Sq, D)
     int8. GQA: q row r reads kv row r // kv_rep via the index map — the KV
-    head broadcast never materializes."""
+    head broadcast never materializes.
+
+    K/V layouts (chosen by shape, as in ``ita_attention_decode``):
+    - 3D ``(BH/kv_rep, Skv, D)``: kernel layout.
+    - 4D ``(B, Skv, G, D)``: cache-native layout (requires ``hq``) —
+      prefill straight out of a KV ring buffer, no host-side transpose.
+    """
     bh, sq, d = q_q.shape
+    kv_4d = k_q.ndim == 4
     skv = k_q.shape[1]
     bq, bkv = min(block_q, sq), min(block_kv, skv)
     assert sq % bq == 0 and skv % bkv == 0
-    assert k_q.shape[0] * kv_rep == bh, (k_q.shape, kv_rep, bh)
     kern = functools.partial(onepass_kernel, causal=causal, window=window,
-                             adaptive=adaptive, bq=bq, bkv=bkv)
+                             adaptive=adaptive, bq=bq, bkv=bkv, kv_4d=kv_4d)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
-                      jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
+    meta = _row_meta(kv_len, q_offset, bh)
+    if kv_4d:
+        assert hq is not None and bh % hq == 0
+        # q row r = batch * hq + head  ->  (batch, kv tile, kv head)
+        kv_spec = _specs_bh(
+            (1, bkv, 1, d),
+            lambda r, i, j: (r // hq, j, (r % hq) // kv_rep, 0))
+    else:
+        assert k_q.shape[0] * kv_rep == bh, (k_q.shape, kv_rep, bh)
+        kv_spec = _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0))
     return pl.pallas_call(
         kern,
         grid=(bh, sq // bq, skv // bkv),
         in_specs=[
             _specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
-            _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
-            _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
+            kv_spec,
+            kv_spec,
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
         ],
         out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
@@ -265,8 +301,7 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
     assert sq % bq == 0 and skv % bkv == 0
     assert k_q.shape[0] * kv_rep == bh, (k_q.shape, kv_rep, bh)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
-                      jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
+    meta = _row_meta(kv_len, q_offset, bh)
 
     k1 = functools.partial(qk_da_kernel, causal=causal, window=window,
                            bq=bq, bkv=bkv)
@@ -277,7 +312,7 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             _specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
             _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
         ],
         out_specs=[
             _specs_bh((1, bq, bkv), lambda b, i, j: (b, i, j)),
@@ -312,7 +347,7 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             _specs_bh((1, bq), lambda b, i, j: (b, i)),
             _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
         ],
         out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
@@ -330,7 +365,9 @@ def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
     """Fused decode step: q (BH, Sq<=8, D) int8 against an int8 KV ring
     buffer with ``kv_len`` valid entries. Single q tile (no q grid axis);
     KV tiles past ``kv_len`` are skipped inside the kernel, so cost scales
-    with the *occupied* prefix, not the ring capacity. Streaming DA
+    with the *occupied* prefix, not the ring capacity — per row:
+    ``kv_len``/``q_offset`` may be (BH,) vectors (ragged batch), each row
+    masking and tile-skipping against its own prefix. Streaming DA
     semantics are identical to ``onepass`` at equal ``block_kv`` — decode
     outputs are bit-identical to the matching prefill rows.
 
@@ -348,8 +385,7 @@ def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
     kern = functools.partial(decode_kernel, causal=causal, window=window,
                              adaptive=adaptive, bq=sq, bkv=bkv, kv_4d=kv_4d)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = jnp.stack([jnp.asarray(kv_len, jnp.int32),
-                      jnp.asarray(q_offset, jnp.int32)]).reshape(1, 2)
+    meta = _row_meta(kv_len, q_offset, bh)
     if kv_4d:
         assert hq is not None and bh % hq == 0
         # q row r = batch * hq + head  ->  (batch, kv tile, kv head)
@@ -368,7 +404,7 @@ def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             kv_spec,
             pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, 2), lambda b, j: (b, 0)),
         ],
         out_specs=_specs_bh((1, sq, d), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),

@@ -44,7 +44,12 @@ KINDS = ("onepass", "twopass", "decode")
 
 
 def _pad_seq(x, mult):
-    """Zero-pad the seq axis (axis 1, any rank) to a multiple of ``mult``."""
+    """Zero-pad the seq axis (axis 1, any rank) to a multiple of ``mult``.
+
+    For decode this is a per-call copy of the whole KV ring whenever its
+    capacity exceeds one block but is not a block multiple — serving
+    callers that care (e.g. the fused generation loop) size their rings
+    to ``block_kv`` multiples so this is a no-op on the hot path."""
     pad = (-x.shape[1]) % mult
     if pad:
         x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
@@ -58,6 +63,17 @@ def _per_head(s, h):
         return jnp.broadcast_to(s, (h,))
     assert s.shape[0] == h, (s.shape, h)
     return s
+
+
+def _per_row(x, b, h):
+    """Expand a dynamic decode offset to one value per (batch·head) kernel
+    row (b-major, head-minor): scalars broadcast, (B,) per-sequence
+    vectors (the ragged path) repeat per head."""
+    x = jnp.asarray(x, jnp.int32).reshape(-1)
+    if x.shape[0] == 1:
+        return jnp.broadcast_to(x, (b * h,))
+    assert x.shape[0] == b, (x.shape, b)
+    return jnp.repeat(x, h)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -92,7 +108,8 @@ def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
         kf = _pad_seq(k_q.reshape(b * hkv, skv, d), bkv)
         vf = _pad_seq(v_q.reshape(b * hkv, skv, d), bkv)
 
-    kv_len = skv if kv_len is None else kv_len
+    kv_len = _per_row(skv if kv_len is None else kv_len, b, hq)
+    q_offset = _per_row(q_offset, b, hq)
     if kind == "decode":
         out = ita_attention_decode(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
@@ -103,7 +120,8 @@ def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
         out = ita_attention_onepass(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
             causal=causal, window=window, adaptive=adaptive, block_q=bq,
-            block_kv=bkv, kv_rep=rep, interpret=interpret)
+            block_kv=bkv, kv_rep=rep, hq=hq if kv_native else None,
+            interpret=interpret)
     else:
         out, _ = ita_attention_twopass(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
@@ -124,18 +142,20 @@ def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
     """Quantized multi-head attention with the ITA integer softmax.
 
     ``q_q``: (B, Hq, Sq, D) int8; ``k_q``/``v_q``: (B, Hkv, Skv, D) int8
-    or, for ``kind="decode"`` with ``kv_native=True``, cache-native
+    or, with ``kv_native=True`` (``kind`` decode or onepass), cache-native
     (B, Skv, Hkv, D) ring buffers (consumed in place via kernel index
     maps, no transpose/broadcast copies). GQA: Hkv must divide Hq; KV
     heads are shared per group via index maps — the broadcast never
     materializes.
     ``q_offset``: logical position of query 0 (decode: valid_kv - Sq).
     ``kv_len``: valid prefix of the KV cache (defaults to Skv).
+    Both accept (B,) per-sequence vectors — the ragged batch path: each
+    (batch·head) kernel row masks/tile-skips against its own prefix.
     Returns (B, Hq, Sq, D) int8 at scale ``s_out``.
     """
     assert kind in KINDS, kind
-    assert not (kv_native and kind != "decode"), \
-        "cache-native KV layout is decode-only"
+    assert not (kv_native and kind == "twopass"), \
+        "cache-native KV layout serves the onepass/decode kernels only"
     return _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, q_offset=q_offset,
                   kv_len=kv_len, causal=causal, window=window, kind=kind,
                   adaptive=adaptive, block_q=block_q, block_kv=block_kv,

@@ -1,12 +1,17 @@
-"""Serving launcher: batched prefill + decode with the ITA integer path.
+"""Serving launcher: batched prefill + one-dispatch fused decode with the
+ITA integer path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --attention-impl ita --batch 4 --prompt-len 32 --gen 16
 
 Demonstrates the production serving loop via ``repro.runtime.generate``:
 quantized (int8) KV ring buffers (``repro.runtime.kv_cache``), integer
-streaming-softmax attention at prefill, incremental integer attention at
-decode, continuous batch of requests.
+streaming-softmax attention at prefill, then **one** jitted ``lax.scan``
+over every decode step — sampling on device, no host round-trip per
+token. ``--ragged`` serves a mixed-length batch (right-padded prompts,
+per-sequence positions through the kernel meta — the precursor to
+continuous batching); ``--loop stepwise`` runs the legacy per-token host
+loop for comparison.
 """
 
 from __future__ import annotations
@@ -44,6 +49,17 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loop", default="fused", choices=["fused", "stepwise"],
+                    help="fused = one scan dispatch for all decode steps; "
+                         "stepwise = legacy per-token host loop")
+    ap.add_argument("--ragged", action="store_true",
+                    help="serve a mixed-length batch: random per-sequence "
+                         "prompt lengths in [prompt_len/2, prompt_len]")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="mask sequences after this token, stop counting "
+                         "them toward tok/s, and exit early once all "
+                         "finished (fused: while_loop; stepwise: a host "
+                         "check that adds a per-step device sync)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
@@ -65,6 +81,12 @@ def main():
         params = init_model(key, cfg)
         prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                      cfg.vocab_size)
+        lengths = None
+        if args.ragged:
+            key, lk = jax.random.split(key)
+            lengths = jax.random.randint(
+                lk, (args.batch,), max(1, args.prompt_len // 2),
+                args.prompt_len + 1)
         frontend = None
         if cfg.frontend_dim:
             frontend = jax.random.normal(
@@ -72,12 +94,20 @@ def main():
                 jnp.float32)
         key, sample_key = jax.random.split(key)
         res = generate(params, cfg, prompts, args.gen, frontend=frontend,
-                       temperature=args.temperature, key=sample_key)
+                       temperature=args.temperature, key=sample_key,
+                       prompt_lengths=lengths, eos_id=args.eos_id,
+                       early_exit=args.eos_id is not None, loop=args.loop)
 
-    print(f"[serve] arch={cfg.name} impl={cfg.attention_impl}")
+    print(f"[serve] arch={cfg.name} impl={cfg.attention_impl} "
+          f"loop={args.loop}" + (" ragged" if args.ragged else ""))
+    if lengths is not None:
+        print(f"[serve] prompt lengths: {lengths.tolist()}")
     print(f"[serve] prefill {args.batch}x{args.prompt_len} tokens in "
           f"{res.prefill_s*1e3:.1f} ms")
-    print(f"[serve] decoded {res.decode_steps} steps x{args.batch} in "
+    dispatches = 1 if args.loop == "fused" else res.decode_steps
+    print(f"[serve] decoded {res.decode_steps} steps x{args.batch} "
+          f"({res.n_decode_tokens} live tokens, {dispatches} device "
+          f"dispatch{'es' if dispatches != 1 else ''}) in "
           f"{res.decode_s*1e3:.1f} ms ({res.decode_tok_s:.1f} tok/s)")
     print("[serve] sample:", res.tokens[0, :12].tolist())
 

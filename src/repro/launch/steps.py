@@ -53,10 +53,11 @@ def input_specs(cfg, shape) -> dict[str, Any]:
             out["frontend"] = sds(
                 (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
         return out
-    # decode: one new token against a seq_len KV cache
+    # decode: one new token per sequence against a seq_len KV cache, at
+    # per-sequence positions (ragged-capable — the production shape)
     out = {"tokens": sds((b, 1), jnp.int32),
            "caches": caches_shape(cfg, b, s),
-           "pos0": sds((), jnp.int32)}
+           "pos0": sds((b,), jnp.int32)}
     if cfg.frontend_dim:
         out["frontend"] = sds(
             (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
@@ -78,10 +79,16 @@ def make_train_step(cfg, opt_cfg: AdamWConfig):
 
 
 def make_prefill_step(cfg):
-    def prefill_step(params, tokens, caches, frontend=None):
+    def prefill_step(params, tokens, caches, frontend=None, lengths=None):
         logits, caches, _ = forward(params, tokens, cfg, mode="prefill",
-                                    frontend=frontend, caches=caches)
-        return logits[:, -1:], caches
+                                    frontend=frontend, caches=caches,
+                                    lengths=lengths)
+        if lengths is None:
+            return logits[:, -1:], caches
+        # ragged: each sequence's next-token logits sit at its own last
+        # valid position of the right-padded prompt
+        idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
+        return jnp.take_along_axis(logits, idx, axis=1), caches
     return prefill_step
 
 
@@ -92,6 +99,104 @@ def make_decode_step(cfg):
                                     pos0=pos0)
         return logits, caches
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Fused generation loop (decode without per-token host dispatch)
+# ---------------------------------------------------------------------------
+
+def sample_token(logits, key, temperature, *, sample: bool):
+    """Next token from (B, 1, V) logits: greedy argmax or temperature
+    sampling. Returns ``(tok (B, 1) int32, new_key)`` — the key is split
+    exactly once per sampled step so the fused scan loop and the per-step
+    host loop consume identical PRNG streams (bit-identical outputs)."""
+    if not sample:
+        return jnp.argmax(logits, -1).astype(jnp.int32), key
+    key, sub = jax.random.split(key)
+    tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+    return tok.astype(jnp.int32), key
+
+
+def advance_step(logits, key, temperature, done, n, *, sample: bool,
+                 eos_id: int | None, pad_id: int):
+    """Per-step tail shared by the fused scan body and the stepwise host
+    loop: sample the next token, pin finished sequences to ``pad_id``,
+    count live decode tokens into ``n`` and fold new EOS hits into
+    ``done``. Both loops calling this one function is what makes their
+    documented bit-parity structural rather than merely test-caught.
+    Returns ``(tok (B, 1), new_key, done, n)``."""
+    nxt, key = sample_token(logits, key, temperature, sample=sample)
+    if eos_id is not None:
+        nxt = jnp.where(done[:, None], pad_id, nxt)
+        n = n + jnp.sum(~done).astype(jnp.int32)
+        done = done | (nxt[:, 0] == eos_id)
+    else:
+        n = n + nxt.shape[0]
+    return nxt, key, done, n
+
+
+def make_generate_loop(cfg, *, gen: int, sample: bool, eos_id: int | None,
+                       pad_id: int, early_exit: bool):
+    """One jitted on-device generation loop: ``gen - 1`` decode steps as a
+    single dispatch instead of ``gen - 1`` host round-trips.
+
+    The carry ``(caches, tok, pos, key, done, n)`` is scanned over decode
+    steps: each step runs the decode forward, samples on-device (PRNG key
+    threaded through the carry), advances the per-sequence positions, and
+    — when ``eos_id`` is set — pins finished sequences to ``pad_id``
+    while counting only live ones into ``n`` (the honest tok/s
+    denominator). ``early_exit`` swaps the scan for a ``lax.while_loop``
+    that stops as soon as every sequence has emitted EOS (same outputs:
+    the steps it skips would have produced only pads).
+
+    Returns ``loop(params, tok0, caches, pos0, key, temperature,
+    frontend) -> (tokens (B, gen-1), n_decode_tokens, steps_run,
+    caches)`` — ``steps_run < gen-1`` when ``early_exit`` fired; jit
+    with ``donate_argnums=(2,)`` so the caches update in place.
+    """
+    decode = make_decode_step(cfg)
+    steps = gen - 1
+
+    def loop(params, tok0, caches, pos0, key, temperature, frontend=None):
+        b = tok0.shape[0]
+        done0 = (tok0[:, 0] == eos_id) if eos_id is not None \
+            else jnp.zeros((b,), jnp.bool_)
+        key = jax.random.PRNGKey(0) if key is None else key
+        carry0 = (caches, tok0, jnp.asarray(pos0, jnp.int32), key, done0,
+                  jnp.zeros((), jnp.int32))
+
+        def step(carry):
+            caches, tok, pos, key, done, n = carry
+            logits, caches = decode(params, tok, caches, pos, frontend)
+            nxt, key, done, n = advance_step(
+                logits, key, temperature, done, n, sample=sample,
+                eos_id=eos_id, pad_id=pad_id)
+            return (caches, nxt, pos + 1, key, done, n)
+
+        if early_exit:
+            out0 = jnp.full((b, steps), pad_id, jnp.int32)
+
+            def cond(st):
+                i, carry = st[0], st[1]
+                return (i < steps) & ~jnp.all(carry[4])
+
+            def body(st):
+                i, carry, out = st
+                carry = step(carry)
+                return (i + 1, carry, out.at[:, i].set(carry[1][:, 0]))
+
+            i, carry, out = jax.lax.while_loop(
+                cond, body, (jnp.zeros((), jnp.int32), carry0, out0))
+            return out, carry[5], i, carry[0]
+
+        def body(carry, _):
+            carry = step(carry)
+            return carry, carry[1][:, 0]
+
+        carry, toks = jax.lax.scan(body, carry0, None, length=steps)
+        return toks.T, carry[5], jnp.asarray(steps, jnp.int32), carry[0]
+
+    return loop
 
 
 # ---------------------------------------------------------------------------

@@ -79,7 +79,7 @@ def make_spec(cfg, *, mode, causal, window, q_len=None,
 
 
 def apply_attention(params, x, *, cfg, kind="global", positions=None,
-                    mem=None, cache=None, mode="train"):
+                    mem=None, cache=None, mode="train", lengths=None):
     """Full attention layer: projections + RoPE + engine dispatch + output
     projection.
 
@@ -87,6 +87,10 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
     ``cache`` (serve): ``KVCacheState`` ring buffer (int8 for quantized
     impls, compute dtype for float), or a ``{"k8", "v8"}`` dict for the
     static cross-attention memory; returns (y, new_cache).
+    ``lengths`` (B,): ragged prefill — per-sequence valid prompt lengths
+    of a right-padded batch; the ring buffer records them as each row's
+    stream position so decode continues raggedly (causal masking keeps
+    valid rows exact; pad rows are garbage the caller never reads).
     """
     d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = x.dtype
@@ -163,7 +167,8 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
         # Full in-layer attention; then write the canonical ring-buffer
         # tail (token t lives at slot t % cache_size) so decode can append.
         y = run(q, k, v, mode=mode)
-        new_cache = cache.prefill_write(_q(k, "s_k"), _q(v, "s_v"))
+        new_cache = cache.prefill_write(_q(k, "s_k"), _q(v, "s_v"),
+                                        lengths=lengths)
     else:                                           # decode append
         s_new = q.shape[1]
         new_cache = cache.decode_append(_q(k, "s_k"), _q(v, "s_v"))

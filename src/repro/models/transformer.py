@@ -109,7 +109,8 @@ def init_block_cache(cfg, kind: str, batch: int, max_len: int):
     raise ValueError(kind)
 
 
-def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode):
+def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode,
+                lengths=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     cm = None if cache is None else cache.get("mix")
@@ -125,7 +126,7 @@ def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode):
         h = apply_norm(p["norm1"], x, cfg.norm_type)
         y, new_mix = A.apply_attention(p["attn"], h, cfg=cfg, kind=akind,
                                        positions=positions, mem=mem,
-                                       cache=cm, mode=mode)
+                                       cache=cm, mode=mode, lengths=lengths)
         if kind == "cross":
             y = y * jnp.tanh(p["gate_attn"]).astype(y.dtype)
         x = residual(y, "post_norm1")
@@ -146,7 +147,7 @@ def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode):
         h = apply_norm(p["norm1"], x, cfg.norm_type)
         y, new_self = A.apply_attention(p["attn"], h, cfg=cfg, kind="global",
                                         positions=positions, cache=cm,
-                                        mode=mode)
+                                        mode=mode, lengths=lengths)
         x = x + y
         h = apply_norm(p["norm_x"], x, cfg.norm_type)
         y, new_cross = A.apply_attention(
@@ -206,7 +207,8 @@ def init_group_cache(cfg, pattern, n_periods, batch, max_len):
         lambda a: jnp.zeros((n_periods,) + a.shape, a.dtype), tmpl)
 
 
-def apply_group(params, x, cfg, pattern, *, positions, mem, caches, mode):
+def apply_group(params, x, cfg, pattern, *, positions, mem, caches, mode,
+                lengths=None):
     """Scan the group over its periods. Returns (x, new_caches, aux_sum)."""
 
     def body(carry, xs):
@@ -218,7 +220,8 @@ def apply_group(params, x, cfg, pattern, *, positions, mem, caches, mode):
             blk_cache = None if pcache is None else pcache[i]
             xc, nc, a = apply_block(pparams[i], xc, kind, cfg,
                                     positions=positions, mem=mem,
-                                    cache=blk_cache, mode=mode)
+                                    cache=blk_cache, mode=mode,
+                                    lengths=lengths)
             new_caches.append(nc)
             aux = aux + a
         ys = None if pcache is None else tuple(new_caches)
@@ -300,23 +303,37 @@ def _encode(params, cfg, frontend, mode):
 
 
 def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
-            pos0=None, skip_unembed=False):
-    """tokens (B, S) int32. Returns (logits, new_caches, aux)."""
+            pos0=None, lengths=None, skip_unembed=False):
+    """tokens (B, S) int32. Returns (logits, new_caches, aux).
+
+    ``pos0``: first token's position — a scalar (lockstep decode) or a
+    (B,) per-sequence vector (ragged batch decode). ``lengths`` (B,)
+    marks a ragged *prefill* of right-padded prompts: the KV caches
+    record per-sequence stream lengths so decode continues each row at
+    its own position (pad columns are causally invisible to valid rows).
+    """
     dt = cfg.compute_dtype()
     x = embed(params["embed"], tokens, dt)
     if cfg.embed_scale:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
     s = tokens.shape[1]
-    positions = (jnp.arange(s, dtype=jnp.int32) if pos0 is None
-                 else pos0 + jnp.arange(s, dtype=jnp.int32))
+    if pos0 is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    else:
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        # (s,) lockstep, or (B, s) per-sequence (ragged decode)
+        positions = pos0[..., None] + jnp.arange(s, dtype=jnp.int32) \
+            if pos0.ndim else pos0 + jnp.arange(s, dtype=jnp.int32)
     if cfg.sinusoidal_pos:
-        # computed from (possibly dynamic) positions so decode works
+        # computed from (possibly dynamic, possibly batched) positions so
+        # decode works
         d = cfg.d_model
         dim = jnp.arange(0, d, 2, dtype=jnp.float32) / d
-        ang = positions[:, None].astype(jnp.float32) / (10000.0 ** dim)
-        pe = jnp.zeros((s, d), jnp.float32).at[:, 0::2].set(jnp.sin(ang)) \
-            .at[:, 1::2].set(jnp.cos(ang))
-        x = x + pe.astype(dt)[None]
+        ang = positions[..., None].astype(jnp.float32) / (10000.0 ** dim)
+        pe = jnp.zeros(ang.shape[:-1] + (d,), jnp.float32) \
+            .at[..., 0::2].set(jnp.sin(ang)) \
+            .at[..., 1::2].set(jnp.cos(ang))
+        x = x + (pe if pe.ndim == 3 else pe[None]).astype(dt)
 
     mem = _encode(params, cfg, frontend, mode)
 
@@ -326,7 +343,7 @@ def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
         g_cache = None if caches is None else caches[gi]
         x, nc, aux = apply_group(params["groups"][gi], x, cfg, pattern,
                                  positions=positions, mem=mem,
-                                 caches=g_cache, mode=mode)
+                                 caches=g_cache, mode=mode, lengths=lengths)
         aux_total = aux_total + aux
         if new_caches is not None:
             new_caches.append(nc)

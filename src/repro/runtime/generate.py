@@ -1,16 +1,26 @@
-"""Batched autoregressive generation: quantized prefill → incremental
+"""Batched autoregressive generation: quantized prefill → fused on-device
 decode through the int8 KV caches.
 
-The serving loop the launchers and examples share: one jitted prefill over
-the whole prompt batch (streaming ITA attention, caches written once),
-then one jitted single-token decode step per generated position (direct
-integer attention against the ring buffers — no full-context recompute,
-the data-movement win ITA's streaming softmax exists for).
+The serving loop the launchers and examples share: one jitted prefill
+over the whole prompt batch (streaming ITA attention, caches written
+once), then **one** jitted ``lax.scan`` over all decode steps — the
+carry ``(caches, tok, pos, key, done)`` lives on device, sampling
+(greedy or temperature) happens on device with a threaded PRNG, and the
+whole ``(B, gen)`` token block returns in a single dispatch. No host
+round-trip per generated token: ITA's streaming softmax minimizes data
+movement inside the kernel, and the fused loop extends that to the
+serving dataflow around it.
 
     from repro.runtime.generate import generate
     res = generate(params, cfg, prompts, gen=32)
     res.tokens          # (B, gen) int32
-    res.decode_tok_s    # decode throughput
+    res.decode_tok_s    # decode throughput (live sequences only)
+
+Ragged batches: pass ``prompt_lengths`` (B,) for right-padded prompts —
+each sequence prefills, positions and decodes at its own length through
+the per-row kernel meta (no padding to the longest prompt's position).
+``loop="stepwise"`` keeps the legacy per-step host loop (one dispatch
+per token) as the parity/benchmark reference.
 """
 
 from __future__ import annotations
@@ -21,6 +31,9 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+LOOPS = ("fused", "stepwise")
 
 
 @functools.lru_cache(maxsize=32)
@@ -33,70 +46,172 @@ def _steps(cfg):
     return prefill, decode
 
 
+@functools.lru_cache(maxsize=32)
+def _gen_loop(cfg, gen, sample, eos_id, pad_id, early_exit):
+    """Jitted fused generation loop, cached per static shape of the loop.
+    The caches carry is donated — the ring buffers update in place across
+    the whole scan."""
+    from repro.launch.steps import make_generate_loop
+    loop = make_generate_loop(cfg, gen=gen, sample=sample, eos_id=eos_id,
+                              pad_id=pad_id, early_exit=early_exit)
+    return jax.jit(loop, donate_argnums=(2,))
+
+
 @dataclasses.dataclass
 class GenerateResult:
     tokens: jax.Array            # (B, gen) generated token ids
     prefill_s: float             # wall-clock of the prefill step
     decode_s: float              # wall-clock of all decode steps
-    decode_steps: int
+    decode_steps: int            # steps actually run (< gen-1 on early exit)
+    n_decode_tokens: int         # decode tokens from *live* sequences
 
     @property
     def decode_tok_s(self) -> float:
-        n = self.decode_steps * self.tokens.shape[0]
-        return n / max(self.decode_s, 1e-9)
+        return self.n_decode_tokens / max(self.decode_s, 1e-9)
 
 
-def _select(logits, temperature, key):
-    """Greedy (temperature 0) or temperature sampling of the next token."""
-    if temperature <= 0.0 or key is None:
-        return jnp.argmax(logits, -1).astype(jnp.int32)
-    tok = jax.random.categorical(key, logits / temperature, axis=-1)
-    return tok.astype(jnp.int32)
+def _validate_caches(caches, cfg, batch: int, max_len: int):
+    """A reused ``caches=`` pytree must match what this call would have
+    allocated — silently decoding into wrong-capacity rings corrupts
+    positions/eviction."""
+    from repro.models import init_caches
+    expected = jax.eval_shape(functools.partial(init_caches, cfg, batch,
+                                                max_len))
+    exp_leaves, exp_tree = jax.tree_util.tree_flatten(expected)
+    got_leaves, got_tree = jax.tree_util.tree_flatten(caches)
+    if exp_tree != got_tree:
+        raise ValueError(
+            f"caches= structure does not match init_caches(cfg, batch="
+            f"{batch}, max_len={max_len}) for {cfg.name!r} — pass the "
+            f"max_len the caches were allocated with")
+    for e, g in zip(exp_leaves, got_leaves):
+        if e.shape != g.shape or e.dtype != g.dtype:
+            raise ValueError(
+                f"caches= leaf mismatch: expected {e.shape}/{e.dtype}, got "
+                f"{g.shape}/{g.dtype} — reused caches must match this "
+                f"call's batch ({batch}) and max_len ({max_len})")
+
+
+def _validate_ragged(cfg, prompt_lengths, prompt_len: int):
+    if not cfg.causal:
+        raise ValueError("ragged prompts need causal attention (pad "
+                         "columns must be invisible to valid rows)")
+    kinds = {k for pat, _ in cfg.layer_groups for k in pat}
+    recurrent = kinds - {"attn", "local", "swa", "enc", "cross",
+                         "attn_cross"}
+    if recurrent:
+        raise ValueError(
+            f"ragged prompts are attention-only (recurrent blocks "
+            f"{sorted(recurrent)} would roll pad tokens into their state)")
+    # every ring must hold the whole padded prompt (per-row eviction of a
+    # padded prefill would need per-row rolls); window kinds cap capacity
+    for kind, cap in (("swa", cfg.window), ("local", cfg.local_window)):
+        if kind in kinds and cap < prompt_len:
+            raise ValueError(
+                f"ragged prompts need ring capacity >= the padded prompt "
+                f"length; {kind!r} blocks cap it at {kind}-window {cap} < "
+                f"prompt_len {prompt_len} — shorten/split the prompts")
+    lengths = jnp.asarray(prompt_lengths, jnp.int32)
+    if lengths.ndim != 1:
+        raise ValueError("prompt_lengths must be a (B,) vector")
+    lnp = np.asarray(lengths)
+    if lnp.min() < 1 or lnp.max() > prompt_len:
+        raise ValueError(f"prompt_lengths must lie in [1, {prompt_len}] "
+                         f"(the padded prompt width); got {lnp.tolist()}")
+    return lengths
 
 
 def generate(params, cfg, prompts, gen: int, *, frontend=None,
              temperature: float = 0.0, key=None, max_len: int | None = None,
-             caches=None) -> GenerateResult:
-    """Prefill the prompt batch, then decode ``gen`` tokens incrementally.
+             caches=None, prompt_lengths=None, eos_id: int | None = None,
+             pad_id: int = 0, loop: str = "fused",
+             early_exit: bool = False) -> GenerateResult:
+    """Prefill the prompt batch, then decode ``gen`` tokens on-device.
 
-    ``prompts`` (B, S) int32. ``max_len`` sizes the KV ring buffers
-    (default S + gen; smaller values window-evict). Pass ``caches`` to
-    reuse pre-allocated buffers across calls.
+    ``prompts`` (B, S) int32, right-padded when ``prompt_lengths`` (B,)
+    declares a ragged batch. ``max_len`` sizes the KV ring buffers
+    (default S + gen; smaller values window-evict — a multiple of the
+    decode kernel's 128-wide KV block avoids a per-step pad copy of the
+    ring when capacity exceeds one block). Pass ``caches`` to reuse
+    pre-allocated buffers across calls (validated against batch/max_len).
+    ``eos_id``: sequences that emit it are masked to
+    ``pad_id`` and stop counting toward ``decode_tok_s``; with
+    ``early_exit=True`` decoding stops once every sequence finished
+    (fused: a ``lax.while_loop`` instead of the scan; stepwise: a host
+    check per step). ``loop="stepwise"`` runs the per-token host loop
+    instead (parity/benchmark reference — bit-identical tokens to the
+    fused loop).
     """
+    from repro.launch.steps import advance_step, sample_token
     from repro.models import init_caches
 
+    if loop not in LOOPS:
+        raise ValueError(f"loop={loop!r} not in {LOOPS}")
+    if early_exit and eos_id is None:
+        raise ValueError("early_exit needs an eos_id to exit on")
     b, prompt_len = prompts.shape
     if gen <= 0:
         return GenerateResult(tokens=jnp.zeros((b, 0), jnp.int32),
-                              prefill_s=0.0, decode_s=0.0, decode_steps=0)
+                              prefill_s=0.0, decode_s=0.0, decode_steps=0,
+                              n_decode_tokens=0)
+    # A capacity > 128 that is not a block_kv multiple makes the kernel
+    # plumbing pad-copy the ring per step; rounding up here is NOT free
+    # either (bigger scan-carry copies cost more than the pad on CPU) —
+    # callers chasing peak decode tok/s should pass a block-multiple
+    # max_len and let the ring window-evict.
     max_len = max_len or prompt_len + gen
     prefill, decode = _steps(cfg)
     if caches is None:
         caches = init_caches(cfg, b, max_len=max_len)
+    else:
+        _validate_caches(caches, cfg, b, max_len)
+    lengths = None
+    if prompt_lengths is not None:
+        lengths = _validate_ragged(cfg, prompt_lengths, prompt_len)
+
+    sample = temperature > 0.0 and key is not None
+    temperature = jnp.asarray(temperature if sample else 1.0, jnp.float32)
 
     t0 = time.perf_counter()
-    logits, caches = prefill(params, prompts, caches, frontend)
-    if key is not None:
-        key, sub = jax.random.split(key)
-    else:
-        sub = None
-    tok = _select(logits, temperature, sub)
+    logits, caches = prefill(params, prompts, caches, frontend, lengths)
+    tok, key = sample_token(logits, key, temperature, sample=sample)
     jax.block_until_ready(tok)
     t_prefill = time.perf_counter() - t0
 
-    out = [tok]
+    # decode starts each sequence at its own stream position
+    pos0 = lengths if lengths is not None \
+        else jnp.full((b,), prompt_len, jnp.int32)
+
     t0 = time.perf_counter()
-    for i in range(gen - 1):
-        logits, caches = decode(params, tok, caches,
-                                jnp.asarray(prompt_len + i, jnp.int32),
-                                frontend)
-        if key is not None:
-            key, sub = jax.random.split(key)
-        tok = _select(logits, temperature, sub)
-        out.append(tok)
-    jax.block_until_ready(tok)
+    if loop == "fused":
+        run = _gen_loop(cfg, gen, sample, eos_id, pad_id, early_exit)
+        rest, n_dec, steps_run, caches = run(params, tok, caches, pos0, key,
+                                             temperature, frontend)
+        tokens = jnp.concatenate([tok, rest], axis=1)
+        jax.block_until_ready(tokens)
+        n_decode, steps_run = int(n_dec), int(steps_run)
+    else:                                   # stepwise host-loop reference
+        done = (tok[:, 0] == eos_id) if eos_id is not None \
+            else jnp.zeros((b,), jnp.bool_)
+        out, pos, steps_run = [tok], pos0, 0
+        n_dec = jnp.zeros((), jnp.int32)    # device-side (no per-step sync)
+        for _ in range(gen - 1):
+            if early_exit and bool(jnp.all(done)):   # opt-in per-step sync
+                break
+            steps_run += 1
+            logits, caches = decode(params, tok, caches, pos, frontend)
+            tok, key, done, n_dec = advance_step(
+                logits, key, temperature, done, n_dec, sample=sample,
+                eos_id=eos_id, pad_id=pad_id)
+            out.append(tok)
+            pos = pos + 1
+        if len(out) < gen:                  # early exit: the rest is pad
+            out.append(jnp.full((b, gen - len(out)), pad_id, jnp.int32))
+        tokens = jnp.concatenate(out, axis=1)
+        jax.block_until_ready(tokens)
+        n_decode = int(n_dec)
     t_decode = time.perf_counter() - t0
 
-    return GenerateResult(tokens=jnp.concatenate(out, axis=1),
-                          prefill_s=t_prefill, decode_s=t_decode,
-                          decode_steps=gen - 1)
+    return GenerateResult(tokens=tokens, prefill_s=t_prefill,
+                          decode_s=t_decode, decode_steps=steps_run,
+                          n_decode_tokens=n_decode)

@@ -64,28 +64,35 @@ def init_cache(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
 
 def prefill_attend(cache: KVCacheState, q_q: jax.Array, k_new: jax.Array,
                    v_new: jax.Array, s_q, s_out, *, causal: bool = True,
-                   window: int = 0, block_q: int = 128, block_kv: int = 128,
+                   window: int = 0, lengths: jax.Array | None = None,
+                   block_q: int = 128, block_kv: int = 128,
                    interpret: bool | None = None):
     """Quantized prefill: per-head-quantize and cache K/V, run the fused
     ITA kernel over the prompt. ``q_q`` (B, Hq, S, D) int8 at scale
-    ``s_q``; ``k_new``/``v_new`` (B, S, G, D) float. Returns
-    ``(out int8 at s_out, new_cache)``.
+    ``s_q``; ``k_new``/``v_new`` (B, S, G, D) float. ``lengths`` (B,)
+    declares a ragged batch of right-padded prompts (per-sequence valid
+    prefixes; causal masking keeps each row's valid outputs exact).
+    Returns ``(out int8 at s_out, new_cache)``.
 
-    Dispatch note: the ``bhsd`` kernel layout + per-head scales make the
-    streaming XLA backend ineligible, so the registry lands on
-    ``ita_onepass_pallas`` — capability-driven, no hand branch.
+    Dispatch note: the cache-native ``bhsd_bsgd`` layout + per-head
+    scales make the streaming XLA backend ineligible, so the registry
+    lands on ``ita_onepass_pallas``, which consumes the (B, S, G, D)
+    K/V buffers in place through kernel index maps — the per-call
+    ``transpose(0, 2, 1, 3)`` relayout copies this module used to make
+    are gone, capability-driven like the decode layout.
     """
     k_q, k_scale = quantize_per_head(k_new)
     v_q, v_scale = quantize_per_head(v_new)
-    cache = cache.prefill_write(k_q, v_q).with_scales(k_scale, v_scale)
+    cache = cache.prefill_write(k_q, v_q, lengths=lengths) \
+                 .with_scales(k_scale, v_scale)
     spec = AttentionSpec(mode="prefill", impl="ita", causal=causal,
-                         window=window, layout="bhsd",
+                         window=window, layout="bhsd_bsgd",
                          scale_kind="per_head", out_dtype="int8",
                          q_len=q_q.shape[2])
-    out = dispatch(q_q, k_q.transpose(0, 2, 1, 3), v_q.transpose(0, 2, 1, 3),
-                   spec=spec,
+    out = dispatch(q_q, k_q, v_q, spec=spec,
                    scales=QuantScales(s_q, k_scale, v_scale, s_out),
-                   block_q=block_q, block_kv=block_kv, interpret=interpret)
+                   kv_len=lengths, block_q=block_q, block_kv=block_kv,
+                   interpret=interpret)
     return out, cache
 
 
@@ -100,8 +107,11 @@ def decode_attend(cache: KVCacheState, q_q: jax.Array, k_new: jax.Array,
     never need rescaling) and attends the single query over the valid
     prefix via the fused decode-shaped kernel, consuming the ring buffers
     cache-natively (``bhsd_bsgd`` layout — no per-step transpose or head
-    broadcast). ``q_q`` (B, Hq, 1, D) int8; ``k_new``/``v_new``
-    (B, 1, G, D) float. Returns ``(out, new_cache)``.
+    broadcast). The cache's per-sequence ``q_offset``/``valid_len``
+    vectors ride into the kernel's per-row meta, so a ragged batch
+    (mixed prompt lengths) decodes in this one call. ``q_q``
+    (B, Hq, 1, D) int8; ``k_new``/``v_new`` (B, 1, G, D) float. Returns
+    ``(out, new_cache)``.
     """
     k_q = quantize_with_scale(k_new, cache.k_scale[None, None, :, None])
     v_q = quantize_with_scale(v_new, cache.v_scale[None, None, :, None])

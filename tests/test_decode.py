@@ -125,26 +125,138 @@ def test_decode_mode_matches_onepass_same_call():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
 
 
+@pytest.mark.parametrize("hq,hkv,window", [(4, 2, 0), (4, 4, 48)])
+def test_ragged_batched_decode_matches_per_sequence(hq, hkv, window):
+    """One batched decode call with per-sequence (B,) q_offset/kv_len is
+    bit-identical to decoding each sequence alone with scalar offsets —
+    mixed prefix lengths, including one past the ring wrap (kv_len ==
+    capacity, q_offset == capacity - 1)."""
+    b, d, cap = 3, 32, 128
+    kv_lens = [40, 128, 97]                    # row 1 is fully wrapped
+    q = _i8(b, hq, 1, d)
+    k, v = _i8(b, hkv, cap, d), _i8(b, hkv, cap, d)
+    sk = rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32)
+    sv = rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32)
+
+    ragged = _fused(q, k, v, jnp.asarray(sk), jnp.asarray(sv), kind="decode",
+                    causal=True, window=window,
+                    q_offset=jnp.asarray([n - 1 for n in kv_lens]),
+                    kv_len=jnp.asarray(kv_lens))
+    for row, n in enumerate(kv_lens):
+        dense = _fused(q[row:row + 1], k[row:row + 1], v[row:row + 1],
+                       jnp.asarray(sk), jnp.asarray(sv), kind="decode",
+                       causal=True, window=window, q_offset=n - 1, kv_len=n)
+        np.testing.assert_array_equal(np.asarray(ragged)[row],
+                                      np.asarray(dense)[0],
+                                      err_msg=f"row {row} kv_len={n}")
+
+
+def test_ragged_decode_attend_engine_matches_per_sequence():
+    """Engine-level ragged decode: one shared cache with per-sequence
+    positions decodes every row bit-identically to running that row in
+    its own B=1 cache (same frozen scales, mixed prompt lengths, decode
+    continuing past the shortest row's prompt)."""
+    b, hq, hkv, d, cap = 3, 4, 2, 32, 64
+    lens = [17, 48, 33]
+    pad = max(lens)
+    steps = 6
+    qf = rng.normal(0, 1, (b, hq, pad + steps, d)).astype(np.float32)
+    kf = rng.normal(0, 1, (b, pad + steps, hkv, d)).astype(np.float32)
+    vf = rng.normal(0, 1, (b, pad + steps, hkv, d)).astype(np.float32)
+    sk = jnp.asarray(rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32))
+    sv = jnp.asarray(rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32))
+    q8 = KV.quantize_with_scale(jnp.asarray(qf), S_Q)
+    k8 = KV.quantize_with_scale(jnp.asarray(kf), sk[None, None, :, None])
+    v8 = KV.quantize_with_scale(jnp.asarray(vf), sv[None, None, :, None])
+
+    # batched ragged cache: padded prefill + per-sequence lengths
+    cache = KV.init_cache(b, cap, hkv, d, per_head_scales=True) \
+        .with_scales(sk, sv) \
+        .prefill_write(k8[:, :pad], v8[:, :pad],
+                       lengths=jnp.asarray(lens, jnp.int32))
+    outs = []
+    for t in range(steps):
+        # row b's step-t query/kv live at its own stream position len_b + t
+        idx = jnp.asarray([ln + t for ln in lens], jnp.int32)
+        qt = jnp.take_along_axis(q8, idx[:, None, None, None], axis=2)
+        kt = jnp.take_along_axis(k8, idx[:, None, None, None], axis=1)
+        vt = jnp.take_along_axis(v8, idx[:, None, None, None], axis=1)
+        cache = cache.decode_append(kt, vt)
+        out = ATT.dispatch(
+            qt, cache.k, cache.v,
+            spec=ATT.AttentionSpec(mode="decode", impl="ita",
+                                   layout="bhsd_bsgd",
+                                   scale_kind="per_head", out_dtype="int8",
+                                   q_len=1),
+            scales=ATT.QuantScales(S_Q, sk, sv, S_OUT),
+            q_offset=cache.q_offset(1), kv_len=cache.valid_len(),
+            block_kv=BKV)
+        outs.append(np.asarray(out))
+
+    for row, ln in enumerate(lens):
+        solo = KV.init_cache(1, cap, hkv, d, per_head_scales=True) \
+            .with_scales(sk, sv) \
+            .prefill_write(k8[row:row + 1, :ln], v8[row:row + 1, :ln])
+        for t in range(steps):
+            p = ln + t
+            solo = solo.decode_append(k8[row:row + 1, p:p + 1],
+                                      v8[row:row + 1, p:p + 1])
+            out = ATT.dispatch(
+                q8[row:row + 1, :, p:p + 1], solo.k, solo.v,
+                spec=ATT.AttentionSpec(mode="decode", impl="ita",
+                                       layout="bhsd_bsgd",
+                                       scale_kind="per_head",
+                                       out_dtype="int8", q_len=1),
+                scales=ATT.QuantScales(S_Q, sk, sv, S_OUT),
+                q_offset=solo.q_offset(1), kv_len=solo.valid_len(),
+                block_kv=BKV)
+            np.testing.assert_array_equal(
+                outs[t][row], np.asarray(out)[0],
+                err_msg=f"row {row} (len {ln}) step {t}")
+
+
+def test_prefill_attend_cache_native_no_transpose():
+    """The bsgd prefill layout (onepass kernel via index maps) is
+    bit-identical to the transposed bhsd dispatch it replaced."""
+    b, hq, hkv, d = 2, 4, 2, 32
+    qf = rng.normal(0, 1, (b, hq, S, d)).astype(np.float32)
+    kf = rng.normal(0, 1, (b, S, hkv, d)).astype(np.float32)
+    vf = rng.normal(0, 1, (b, S, hkv, d)).astype(np.float32)
+    q8 = KV.quantize_with_scale(jnp.asarray(qf), S_Q)
+
+    cache = KV.init_cache(b, S, hkv, d, per_head_scales=True)
+    out, cache = KV.prefill_attend(cache, q8, jnp.asarray(kf),
+                                   jnp.asarray(vf), S_Q, S_OUT,
+                                   block_q=32, block_kv=BKV)
+    ref = _fused(np.asarray(q8), np.asarray(cache.k.transpose(0, 2, 1, 3)),
+                 np.asarray(cache.v.transpose(0, 2, 1, 3)), cache.k_scale,
+                 cache.v_scale, kind="onepass", causal=True, window=0,
+                 block_q=32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
 def test_ring_buffer_eviction_and_tracking():
-    """Slot layout, pos/valid_len/q_offset across prefill + wrap-around."""
+    """Slot layout, pos/valid_len/q_offset across prefill + wrap-around.
+    ``pos`` is per-sequence (B,) — scalar reads go through ``.item()``."""
     b, g, hd, cap = 1, 2, 4, 16
     toks = _i8(b, 24, g, hd)
 
     cache = KV.init_cache(b, cap, g, hd)
     cache = cache.prefill_write(jnp.asarray(toks[:, :12]),
                                 jnp.asarray(toks[:, :12]))
-    assert int(cache.pos) == 12
-    assert int(cache.valid_len()) == 12
-    assert int(cache.q_offset(1)) == 11
+    assert cache.pos.shape == (b,)
+    assert int(cache.pos[0]) == 12
+    assert int(cache.valid_len()[0]) == 12
+    assert int(cache.q_offset(1)[0]) == 11
     np.testing.assert_array_equal(np.asarray(cache.k[:, :12]),
                                   toks[:, :12])
 
     for t in range(12, 24):
         cache = cache.decode_append(jnp.asarray(toks[:, t:t + 1]),
                                     jnp.asarray(toks[:, t:t + 1]))
-    assert int(cache.pos) == 24
-    assert int(cache.valid_len()) == cap
-    assert int(cache.q_offset(1)) == cap - 1
+    assert int(cache.pos[0]) == 24
+    assert int(cache.valid_len()[0]) == cap
+    assert int(cache.q_offset(1)[0]) == cap - 1
     # token t lives in slot t % cap; tokens 8..23 survive
     for t in range(8, 24):
         np.testing.assert_array_equal(np.asarray(cache.k[:, t % cap]),
@@ -153,10 +265,43 @@ def test_ring_buffer_eviction_and_tracking():
     # long prefill (> capacity) keeps only the tail, same slot rule
     cache2 = KV.init_cache(b, cap, g, hd).prefill_write(
         jnp.asarray(toks), jnp.asarray(toks))
-    assert int(cache2.pos) == 24
+    assert int(cache2.pos[0]) == 24
     for t in range(8, 24):
         np.testing.assert_array_equal(np.asarray(cache2.k[:, t % cap]),
                                       toks[:, t])
+
+
+def test_ragged_ring_buffer_tracking():
+    """Per-sequence pos: a ragged prefill starts each row at its own
+    length; appends advance and wrap each row independently."""
+    b, g, hd, cap = 3, 2, 4, 16
+    toks = _i8(b, 12, g, hd)
+    lengths = jnp.asarray([5, 12, 9], jnp.int32)
+    cache = KV.init_cache(b, cap, g, hd).prefill_write(
+        jnp.asarray(toks), jnp.asarray(toks), lengths=lengths)
+    np.testing.assert_array_equal(np.asarray(cache.pos), [5, 12, 9])
+    np.testing.assert_array_equal(np.asarray(cache.valid_len()), [5, 12, 9])
+    np.testing.assert_array_equal(np.asarray(cache.q_offset(1)), [4, 11, 8])
+
+    # 8 appends: row 0 reaches 13, row 1 wraps past cap=16 to 20, row 2: 17
+    steps = _i8(b, 8, g, hd)
+    for t in range(8):
+        cache = cache.decode_append(jnp.asarray(steps[:, t:t + 1]),
+                                    jnp.asarray(steps[:, t:t + 1]))
+    np.testing.assert_array_equal(np.asarray(cache.pos), [13, 20, 17])
+    np.testing.assert_array_equal(np.asarray(cache.valid_len()),
+                                  [13, 16, 16])
+    # each row's appended token t landed in its own slot (len_b + t) % cap
+    for row, ln in enumerate([5, 12, 9]):
+        for t in range(8):
+            np.testing.assert_array_equal(
+                np.asarray(cache.k[row, (ln + t) % cap]), steps[row, t],
+                err_msg=f"row {row} token {t}")
+
+    # ragged prefill longer than capacity is a per-row roll we refuse
+    with np.testing.assert_raises(ValueError):
+        KV.init_cache(b, 8, g, hd).prefill_write(
+            jnp.asarray(toks), jnp.asarray(toks), lengths=lengths)
 
 
 def test_multi_token_append_wraps_ring_boundary():
@@ -169,8 +314,24 @@ def test_multi_token_append_wraps_ring_boundary():
     # 4-token burst from pos=15: slots 15, 0, 1, 2
     cache = cache.decode_append(jnp.asarray(toks[:, 15:19]),
                                 jnp.asarray(toks[:, 15:19]))
-    assert int(cache.pos) == 19
+    assert int(cache.pos[0]) == 19
     for t in range(3, 19):          # tokens 3..18 survive
+        np.testing.assert_array_equal(np.asarray(cache.k[:, t % cap]),
+                                      toks[:, t], err_msg=f"token {t}")
+
+
+def test_burst_append_longer_than_capacity_is_deterministic():
+    """A burst longer than the ring writes only its last C tokens —
+    scattering all of them would hit duplicate slots (unspecified winner
+    in JAX scatter semantics)."""
+    b, g, hd, cap = 1, 2, 4, 4
+    toks = _i8(b, 9, g, hd)
+    cache = KV.init_cache(b, cap, g, hd).prefill_write(
+        jnp.asarray(toks[:, :3]), jnp.asarray(toks[:, :3]))
+    cache = cache.decode_append(jnp.asarray(toks[:, 3:]),
+                                jnp.asarray(toks[:, 3:]))   # 6-token burst
+    assert int(cache.pos[0]) == 9
+    for t in range(5, 9):           # survivors: tokens 5..8 at slot t % 4
         np.testing.assert_array_equal(np.asarray(cache.k[:, t % cap]),
                                       toks[:, t], err_msg=f"token {t}")
 
@@ -194,7 +355,8 @@ def test_kv_cache_state_is_pytree():
 
     tok = jnp.ones((2, 1, 2, 4), jnp.int8)
     out = step(cache, tok)
-    assert int(out.pos) == 1 and isinstance(out, KV.KVCacheState)
+    assert isinstance(out, KV.KVCacheState)
+    np.testing.assert_array_equal(np.asarray(out.pos), [1, 1])
 
 
 def test_per_head_quantization_roundtrip():

@@ -1,0 +1,170 @@
+"""Fused on-device generation loop: parity, EOS semantics, ragged decode.
+
+The acceptance property: ``generate(loop="fused")`` — one jitted
+``lax.scan`` dispatch for all decode steps, on-device sampling — is
+**bit-identical** to ``loop="stepwise"`` (the legacy one-dispatch-per-
+token host loop), greedy and seeded-temperature, across causal /
+sliding-window / GQA configs; the ``while_loop`` EOS early-exit variant
+matches the scan; and ragged batches (per-sequence prompt lengths)
+decode through the same loop with per-row positions.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, init_caches, init_model
+from repro.runtime.generate import generate
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(name="genloop-smoke", family="dense", d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=128, layer_groups=((("attn",), 2),),
+                  dtype="float32", attention_impl="ita")
+CFG_SWA = dataclasses.replace(CFG, name="genloop-swa", window=8,
+                              layer_groups=((("swa",), 2),))
+B, PROMPT, GEN = 2, 12, 8
+
+
+def _prompts(b=B, s=PROMPT, vocab=CFG.vocab_size):
+    return jax.random.randint(KEY, (b, s), 0, vocab)
+
+
+def _gen(cfg, loop, **kw):
+    return generate(init_model(KEY, cfg), cfg, _prompts(), GEN, loop=loop,
+                    max_len=PROMPT + GEN, **kw)
+
+
+@pytest.mark.parametrize("cfg", [CFG, CFG_SWA],
+                         ids=["causal_gqa", "sliding_window"])
+def test_fused_scan_bit_identical_to_stepwise_greedy(cfg):
+    a = _gen(cfg, "fused")
+    b = _gen(cfg, "stepwise")
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    assert a.n_decode_tokens == b.n_decode_tokens == B * (GEN - 1)
+    assert a.decode_steps == b.decode_steps == GEN - 1
+
+
+def test_fused_scan_bit_identical_to_stepwise_sampled():
+    """Seeded temperature sampling: the scan threads the PRNG through the
+    carry with the exact split schedule of the host loop."""
+    key = jax.random.PRNGKey(7)
+    a = _gen(CFG, "fused", temperature=0.8, key=key)
+    b = _gen(CFG, "stepwise", temperature=0.8, key=key)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    # a different seed actually changes the draw (sampling is live)
+    c = _gen(CFG, "fused", temperature=0.8, key=jax.random.PRNGKey(8))
+    assert not np.array_equal(np.asarray(a.tokens), np.asarray(c.tokens))
+
+
+def test_eos_masking_and_live_token_accounting():
+    """Post-EOS positions are pad; n_decode_tokens counts only live
+    sequences (the honest decode_tok_s denominator); fused == stepwise."""
+    base = _gen(CFG, "fused")
+    eos = int(base.tokens[0, 2])               # row 0 emits this by step 2
+    pad = CFG.vocab_size - 1                   # distinguishable from eos
+    a = _gen(CFG, "fused", eos_id=eos, pad_id=pad)
+    b = _gen(CFG, "stepwise", eos_id=eos, pad_id=pad)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    assert a.n_decode_tokens == b.n_decode_tokens
+
+    toks = np.asarray(a.tokens)
+    expected_live = 0
+    for row in toks:
+        hits = np.flatnonzero(row == eos)
+        end = hits[0] if hits.size else GEN - 1
+        assert np.all(row[end + 1:] == pad), row   # pads after first EOS
+        # decode step i is live iff no EOS among outputs 0..i
+        expected_live += int(np.sum([not np.any(row[:i + 1] == eos)
+                                     for i in range(GEN - 1)]))
+    assert a.n_decode_tokens == expected_live
+    assert a.n_decode_tokens < B * (GEN - 1)       # row 0 finished early
+    assert a.decode_tok_s == a.n_decode_tokens / max(a.decode_s, 1e-9)
+
+
+def test_while_loop_early_exit_matches_scan():
+    base = _gen(CFG, "fused")
+    eos = int(base.tokens[0, 2])
+    a = _gen(CFG, "fused", eos_id=eos)
+    b = _gen(CFG, "fused", eos_id=eos, early_exit=True)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    assert a.n_decode_tokens == b.n_decode_tokens
+    # stepwise honors early_exit too (host check per step), same outputs
+    c = _gen(CFG, "stepwise", eos_id=eos, early_exit=True)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(c.tokens))
+    assert a.n_decode_tokens == c.n_decode_tokens
+    # decode_steps reports steps actually run, identically for both
+    assert b.decode_steps == c.decode_steps <= GEN - 1
+    with pytest.raises(ValueError, match="early_exit"):
+        _gen(CFG, "fused", early_exit=True)        # needs an eos_id
+
+
+def test_reused_caches_validated():
+    """A reused caches= arg must match this call's batch/max_len —
+    silently decoding into wrong-size rings was the PR-3 hardening bug."""
+    params = init_model(KEY, CFG)
+    prompts = _prompts()
+    good = init_caches(CFG, B, max_len=PROMPT + GEN)
+    res = generate(params, CFG, prompts, GEN, max_len=PROMPT + GEN,
+                   caches=good)
+    assert res.tokens.shape == (B, GEN)
+    with pytest.raises(ValueError, match="max_len"):
+        generate(params, CFG, prompts, GEN, max_len=PROMPT + GEN,
+                 caches=init_caches(CFG, B, max_len=PROMPT + GEN + 4))
+    with pytest.raises(ValueError, match="max_len"):
+        generate(params, CFG, prompts, GEN, max_len=PROMPT + GEN,
+                 caches=init_caches(CFG, B + 1, max_len=PROMPT + GEN))
+
+
+def test_ragged_prefill_matches_unpadded_forward():
+    """Ragged prefill of a right-padded batch: every sequence's
+    next-token logits and first decode step match running it unpadded."""
+    cfg = CFG
+    params = init_model(KEY, cfg)
+    b, pad = 3, PROMPT
+    lens = [5, 12, 9]
+    tokens = _prompts(b, pad + 1)
+    caches = init_caches(cfg, b, max_len=pad + 4)
+    lengths = jnp.asarray(lens, jnp.int32)
+    lp, caches, _ = forward(params, tokens[:, :pad], cfg, mode="prefill",
+                            caches=caches, lengths=lengths)
+    # decode one step at per-sequence positions
+    nxt = jnp.take_along_axis(tokens, lengths[:, None], axis=1)
+    ld, _, _ = forward(params, nxt, cfg, mode="decode", caches=caches,
+                       pos0=lengths)
+
+    for row, ln in enumerate(lens):
+        solo = init_caches(cfg, 1, max_len=pad + 4)
+        lp1, solo, _ = forward(params, tokens[row:row + 1, :ln], cfg,
+                               mode="prefill", caches=solo)
+        np.testing.assert_allclose(np.asarray(lp[row, ln - 1]),
+                                   np.asarray(lp1[0, -1]), atol=2e-3,
+                                   err_msg=f"prefill row {row}")
+        ld1, _, _ = forward(params, tokens[row:row + 1, ln:ln + 1], cfg,
+                            mode="decode", caches=solo, pos0=ln)
+        np.testing.assert_allclose(np.asarray(ld[row, 0]),
+                                   np.asarray(ld1[0, 0]), atol=2e-3,
+                                   err_msg=f"decode row {row}")
+
+
+def test_ragged_generate_fused_matches_stepwise():
+    """Mixed prompt lengths through generate(): fused == stepwise
+    bit-for-bit, and the loop runs at per-sequence positions (wrap-free
+    sanity via valid token ids)."""
+    params = init_model(KEY, CFG)
+    prompts = _prompts(3, PROMPT)
+    lens = jnp.asarray([5, 12, 9], jnp.int32)
+    a = generate(params, CFG, prompts, GEN, prompt_lengths=lens,
+                 max_len=PROMPT + GEN)
+    b = generate(params, CFG, prompts, GEN, prompt_lengths=lens,
+                 max_len=PROMPT + GEN, loop="stepwise")
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    assert bool(jnp.all((a.tokens >= 0) & (a.tokens < CFG.vocab_size)))
+    with pytest.raises(ValueError, match="prompt_lengths"):
+        generate(params, CFG, prompts, GEN,
+                 prompt_lengths=jnp.asarray([0, 12, 9]))
