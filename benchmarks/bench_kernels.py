@@ -4,7 +4,17 @@ accounting; wall numbers are CPU-interpret and NOT TPU times).
 Derived columns report the *structural* quantities that determine TPU
 performance: VMEM working set per grid step and HBM bytes per output tile
 for the chosen BlockSpecs (what you reason about on the lowered IR).
+
+``--sweep`` (or env ``ITA_BENCH_SWEEP=1``) runs a (block_q, block_kv)
+grid over the fused onepass/decode backends and reports wall time plus
+the structural VMEM/DMA columns per cell — the data behind the
+per-backend defaults recorded in ``repro.kernels.common.BLOCK_DEFAULTS``
+(the registry's dispatch defaults; override per call with
+``block_q=``/``block_kv=`` opts).
 """
+
+import os
+import time
 
 import numpy as np
 
@@ -66,10 +76,84 @@ def interpret_check_rows():
             ("kernels/ita_attention_exact_vs_ref", int(ok_att))]
 
 
+def _attention_vmem(bq, bkv, d):
+    """VMEM working set (bytes) of one fused-attention grid step."""
+    return bq * d + 2 * bkv * d + bq * d * 4 + 2 * bq * 4 + bq * bkv * 4
+
+
+def sweep_rows(seq=256, d=64, heads=2, iters=3):
+    """(block_q, block_kv) grid over the fused backends.
+
+    Wall numbers are CPU-interpret (structure, not silicon); the VMEM
+    column is platform-independent and is what actually picks the
+    defaults: the largest block pair whose working set stays well inside
+    a TPU core's VMEM while keeping the grid deep enough to pipeline.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import attention as ATT
+
+    rng = np.random.default_rng(0)
+    s = np.float32(0.05)
+    scales = ATT.QuantScales.per_tensor(s, s_out=np.float32(0.02))
+    q = jnp.asarray(rng.integers(-128, 128, (1, heads, seq, d),
+                                 dtype=np.int8))
+    q1 = q[:, :, :1]
+    kv = jnp.asarray(rng.integers(-128, 128, (1, heads, seq, d),
+                                  dtype=np.int8))
+    pre = ATT.AttentionSpec(mode="prefill", impl="ita", layout="bhsd",
+                            out_dtype="int8")
+    dec = ATT.AttentionSpec(mode="decode", impl="ita", layout="bhsd",
+                            out_dtype="int8", q_len=1)
+
+    def timed(fn):
+        jax.block_until_ready(fn())            # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    rows = []
+    for bq in (32, 64, 128):
+        for bkv in (32, 64, 128):
+            if seq % bq or seq % bkv:
+                continue
+            us = timed(lambda: ATT.dispatch(
+                q, kv, kv, spec=pre, scales=scales,
+                backend="ita_onepass_pallas", block_q=bq, block_kv=bkv))
+            rows.append((f"kernels/sweep_onepass/bq{bq}_bkv{bkv}",
+                         us, _attention_vmem(bq, bkv, d)))
+    for bkv in (32, 64, 128):
+        if seq % bkv:
+            continue
+        us = timed(lambda: ATT.dispatch(
+            q1, kv, kv, spec=dec, scales=scales, q_offset=seq - 1,
+            kv_len=seq, backend="ita_decode_pallas", block_kv=bkv))
+        rows.append((f"kernels/sweep_decode/bkv{bkv}",
+                     us, _attention_vmem(8, bkv, d)))
+    return rows
+
+
 def main():
     for name, val in vmem_rows() + interpret_check_rows():
         print(f"{name},0,{val}")
+    if bool(int(os.environ.get("ITA_BENCH_SWEEP", "0"))):
+        from repro.kernels.common import BLOCK_DEFAULTS
+        for name, us, vmem in sweep_rows():
+            print(f"{name},{us:.1f},{vmem}")
+        for backend, (bq, bkv) in BLOCK_DEFAULTS.items():
+            print(f"kernels/block_default/{backend},0,"
+                  f"bq={bq}_bkv={bkv}")
 
 
 if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the (block_q, block_kv) grid behind "
+                         "kernels.common.BLOCK_DEFAULTS")
+    if ap.parse_args().sweep:
+        os.environ["ITA_BENCH_SWEEP"] = "1"
     main()

@@ -1,0 +1,195 @@
+"""Continuous-batching serving benchmark: sustained tok/s over an
+arrival trace, continuous (paged pool + admission scheduler) vs static
+ragged batching.
+
+The claim under test (ISSUE 4 acceptance): with mixed generation lengths
+arriving over time, **continuous batching sustains higher aggregate
+tok/s than static batching on the same trace** — a static batch decodes
+until its *longest* member finishes (short requests strand their slots
+and the queue waits), while the continuous scheduler releases a finished
+sequence's pages and admits queued work between fused scan segments.
+Measured on the CI (CPU/interpret) configuration: indicative structure,
+not silicon numbers, but the step-count arithmetic it demonstrates
+(static: sum over batches of max-gen; continuous: ~sum(gen)/slots) is
+hardware-independent.
+
+Writes ``BENCH_serve.json`` (env ``ITA_BENCH_OUT_SERVE`` overrides the
+path): per-mode sustained tok/s, p50/p95 request latency and page-pool
+utilization, schema-checked on every run; the smoke run (CI) asserts the
+continuous > static ordering.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import init_model
+from repro.runtime.generate import ServeRequest, generate, serve_continuous
+
+# Sized so a decode step's compute is non-trivial next to the per-
+# dispatch overhead of the CPU-interpret CI config: the quantity under
+# test is the *step count* continuous batching saves (static decodes
+# every batch to its longest member), and that signal needs steps to
+# cost more than the host glue around them.
+CFG = ModelConfig(
+    name="bench-serve", family="dense", d_model=64, n_heads=2,
+    n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=64,
+    layer_groups=((("attn",), 1),), dtype="float32", attention_impl="ita")
+
+SLOTS = 8
+PROMPT_PAD = 16
+# page == the per-slot window, so a paged decode step streams exactly as
+# many KV tiles as the static baseline's ring (one) — the benchmark then
+# isolates *scheduling* (slot/page reuse), not per-step tile count
+PAGE = 96
+SEGMENT = 12
+MAX_LEN = 96                    # per-slot window: 1 page
+
+SCHEMA_KEYS = {"schema_version", "config", "continuous", "static",
+               "speedup"}
+MODE_KEYS = {"tok_s", "wall_s", "tokens", "requests"}
+
+
+def make_trace(n_requests, rng):
+    """Mixed gen lengths (one long straggler per SLOTS requests, so every
+    static batch contains exactly one) arriving a few steps apart — the
+    shape static batching is worst at: each batch decodes ~80 steps for a
+    mean useful budget of ~19 tokens/slot while the queue waits."""
+    reqs = []
+    step = 0
+    for i in range(n_requests):
+        gen = 80 if i % SLOTS == 0 else int(rng.integers(6, 14))
+        plen = int(rng.integers(PROMPT_PAD // 2, PROMPT_PAD + 1))
+        reqs.append(ServeRequest(
+            prompt=rng.integers(0, CFG.vocab_size, plen).astype(np.int32),
+            gen=gen, arrival=step))
+        step += int(rng.integers(0, 4))
+    return reqs
+
+
+def run_continuous_once(params, reqs):
+    res = serve_continuous(params, CFG, reqs, slots=SLOTS, segment=SEGMENT,
+                           max_len=MAX_LEN, page_size=PAGE)
+    assert len(res.completed) == len(reqs), "trace not fully served"
+    return res
+
+
+def summarize_continuous(best):
+    util = [u for _, u in best.page_util]
+    return {
+        "tok_s": round(best.tok_s, 3),
+        "wall_s": round(best.wall_s, 6),
+        "tokens": best.total_tokens,
+        "requests": len(best.completed),
+        "steps": best.steps,
+        "segments": best.segments,
+        "admission_rounds": best.admission_rounds,
+        "latency_p50_s": round(best.latency_quantile(0.5), 6),
+        "latency_p95_s": round(best.latency_quantile(0.95), 6),
+        "page_util_peak": round(max(util, default=0.0), 4),
+        "page_util_mean": round(float(np.mean(util)) if util else 0.0, 4),
+    }
+
+
+def run_static_once(params, reqs):
+    """Static ragged batching baseline on the same trace: requests in
+    arrival order, batches of SLOTS, each batch generates to its longest
+    member's budget before the next batch starts (the pre-paged serving
+    loop). Useful tokens counted identically (each request's own gen).
+    Returns (wall_s, total_tokens)."""
+    wall = 0.0
+    total_tokens = 0
+    for i in range(0, len(reqs), SLOTS):
+        batch = reqs[i:i + SLOTS]
+        lens = [int(np.asarray(r.prompt).size) for r in batch]
+        prompts = np.zeros((len(batch), PROMPT_PAD), np.int32)
+        for row, r in enumerate(batch):
+            prompts[row, :lens[row]] = np.asarray(r.prompt)
+        res = generate(params, CFG, jax.numpy.asarray(prompts),
+                       max(r.gen for r in batch), max_len=MAX_LEN,
+                       prompt_lengths=jax.numpy.asarray(lens))
+        wall += res.prefill_s + res.decode_s
+        total_tokens += sum(r.gen for r in batch)
+    return wall, total_tokens
+
+
+def _validate_schema(payload):
+    assert SCHEMA_KEYS <= set(payload), set(payload)
+    assert payload["schema_version"] == 1
+    for mode in ("continuous", "static"):
+        missing = MODE_KEYS - set(payload[mode])
+        assert not missing, f"{mode} missing {missing}"
+        assert payload[mode]["tok_s"] > 0, payload[mode]
+    assert {"latency_p50_s", "latency_p95_s", "page_util_peak",
+            "page_util_mean"} <= set(payload["continuous"])
+
+
+def main():
+    smoke = bool(int(os.environ.get("ITA_BENCH_SMOKE", "0")))
+    rng = np.random.default_rng(0)
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    reqs = make_trace(16 if smoke else 32, rng)
+
+    # warm the compile caches (prefill, segment scan, adopt/release, the
+    # static fused loop) so both modes time steady-state serving
+    run_continuous_once(params, reqs)
+    run_static_once(params, reqs)
+
+    # this container's noise comes in multi-second bursts, so the two
+    # modes are *interleaved* (every iteration runs both back to back)
+    # and each takes its best wall — a burst then degrades both sides
+    # rather than whichever mode happened to be on the clock
+    iters = 2 if smoke else 3
+    best_cont, best_static, static_tokens = None, None, 0
+    for _ in range(iters):
+        res = run_continuous_once(params, reqs)
+        if best_cont is None or res.wall_s < best_cont.wall_s:
+            best_cont = res
+        wall, static_tokens = run_static_once(params, reqs)
+        if best_static is None or wall < best_static:
+            best_static = wall
+    cont = summarize_continuous(best_cont)
+    stat = {
+        "tok_s": round(static_tokens / max(best_static, 1e-9), 3),
+        "wall_s": round(best_static, 6),
+        "tokens": static_tokens,
+        "requests": len(reqs),
+    }
+    speedup = cont["tok_s"] / max(stat["tok_s"], 1e-9)
+
+    print(f"serve/continuous_tok_s,0,{cont['tok_s']:.6g}")
+    print(f"serve/static_tok_s,0,{stat['tok_s']:.6g}")
+    print(f"serve/continuous_vs_static,0,{speedup:.6g}")
+    print(f"serve/latency_p50_ms,0,{cont['latency_p50_s'] * 1e3:.6g}")
+    print(f"serve/latency_p95_ms,0,{cont['latency_p95_s'] * 1e3:.6g}")
+    print(f"serve/page_util_peak,0,{cont['page_util_peak']:.6g}")
+
+    # ISSUE 4 acceptance: continuous batching must sustain higher
+    # aggregate tok/s than static ragged batching on the same trace
+    assert speedup > 1.0, (
+        f"continuous batching ({cont['tok_s']} tok/s) did not beat static "
+        f"ragged batching ({stat['tok_s']} tok/s) on the arrival trace")
+
+    payload = {
+        "schema_version": 1,
+        "config": {"arch": CFG.name, "slots": SLOTS, "segment": SEGMENT,
+                   "page_size": PAGE, "max_len": MAX_LEN,
+                   "prompt_pad": PROMPT_PAD, "requests": len(reqs),
+                   "backend": jax.default_backend(), "smoke": smoke},
+        "continuous": cont,
+        "static": stat,
+        "speedup": round(speedup, 3),
+    }
+    out_path = os.environ.get("ITA_BENCH_OUT_SERVE", "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    with open(out_path) as f:          # round-trip: the rot guard
+        _validate_schema(json.load(f))
+    print(f"serve/artifact,0,{out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ points importable and runnable as the APIs underneath them move.
 | bench_dataflow    | §III weight-stationary bandwidth eq.     |
 | bench_kernels     | kernel VMEM/traffic structure + checks   |
 | bench_decode      | int8 KV-cache decode vs full recompute   |
+| bench_serve       | continuous batching vs static (tok/s)    |
 | bench_roofline    | §Roofline table from dry-run artifacts   |
 """
 
@@ -33,10 +34,11 @@ def main() -> None:
         os.environ["ITA_BENCH_SMOKE"] = "1"
 
     from benchmarks import (bench_attention, bench_dataflow, bench_decode,
-                            bench_kernels, bench_roofline, bench_softmax_mae)
+                            bench_kernels, bench_roofline, bench_serve,
+                            bench_softmax_mae)
     print("name,us_per_call,derived")
     for mod in (bench_softmax_mae, bench_dataflow, bench_attention,
-                bench_kernels, bench_decode, bench_roofline):
+                bench_kernels, bench_decode, bench_serve, bench_roofline):
         try:
             mod.main()
         except Exception as e:  # noqa: BLE001

@@ -24,6 +24,11 @@ Pieces:
   (per-tensor scalars or per-head vectors).
 - ``KVCacheState``: typed int8 KV ring-buffer state (replaces the plain
   cache dicts).
+- ``PagedKVState``: the continuous-batching allocator — one shared
+  ``(num_pages, page_size, G, hd)`` arena, per-sequence page tables and
+  an on-device free stack; logical ring semantics, O(live tokens) memory.
+  Served by the fused kernels through the ``bhsd_paged`` layout +
+  ``dispatch(..., page_table=...)``.
 - Backend registry: each implementation declares ``supports(spec)``;
   ``dispatch`` runs the first eligible backend (or an explicit
   ``backend=`` override). Adding a kernel = one ``register_backend``
@@ -35,13 +40,13 @@ from repro.attention.registry import (Backend, BackendUnsupported,  # noqa: F401
                                       dispatch, get_backend, list_backends,
                                       register_backend)
 from repro.attention.spec import AttentionSpec, QuantScales  # noqa: F401
-from repro.attention.state import KVCacheState  # noqa: F401
+from repro.attention.state import KVCacheState, PagedKVState  # noqa: F401
 
 # Importing the module registers the built-in backends.
 from repro.attention import backends as _backends  # noqa: F401,E402
 
 __all__ = [
-    "AttentionSpec", "QuantScales", "KVCacheState",
+    "AttentionSpec", "QuantScales", "KVCacheState", "PagedKVState",
     "Backend", "BackendUnsupported", "dispatch", "list_backends",
     "backend_reasons", "register_backend", "get_backend", "all_backends",
 ]

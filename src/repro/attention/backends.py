@@ -34,6 +34,7 @@ from repro.attention.chunked import streaming_attention
 from repro.attention.registry import Backend, register_backend
 from repro.attention.spec import AttentionSpec, QuantScales
 from repro.core.quant import fake_quant
+from repro.kernels.common import default_blocks
 from repro.kernels.ita_attention.ops import fused_attention
 
 _DEF_Q_CHUNK = 512
@@ -247,6 +248,9 @@ def _twopass_supports(spec: AttentionSpec):
     ok = _fused_common_supports(spec)
     if ok is not True:
         return ok
+    if spec.layout == "bhsd_paged":
+        return ("materializes/re-streams a contiguous A matrix; the paged "
+                "KV pool serves the onepass/decode kernels")
     if spec.mode != "prefill":
         return ("paper-faithful analysis path — materializes the A matrix "
                 "in HBM; decode rides the fused decode/onepass kernels")
@@ -267,15 +271,16 @@ def _decode_supports(spec: AttentionSpec):
 
 def _fused_run(kind, q, k, v, spec, scales, q_offset, kv_len, opts):
     scales.require("s_q", "s_k", "s_v", "s_out")
+    page_table = opts.get("page_table")
     if spec.layout == "bshd":
         q8 = jnp.swapaxes(_quantize(q, scales.s_q, 2), 1, 2)
         k8 = _quantize(k, scales.s_k, 2)
         v8 = _quantize(v, scales.s_v, 2)
         kv_native = True
-    else:                          # bhsd / bhsd_bsgd: q already (B,H,S,D)
+    else:             # bhsd / bhsd_bsgd / bhsd_paged: q already (B,H,S,D)
         q8 = _quantize(q, scales.s_q, 1)
         kv_native = spec.layout == "bhsd_bsgd"
-        kv_axis = 2 if kv_native else 1
+        kv_axis = 1 if spec.layout == "bhsd" else 2
         k8 = _quantize(k, scales.s_k, kv_axis)
         v8 = _quantize(v, scales.s_v, kv_axis)
     if kv_native and kind == "twopass":
@@ -284,12 +289,15 @@ def _fused_run(kind, q, k, v, spec, scales, q_offset, kv_len, opts):
         k8 = k8.transpose(0, 2, 1, 3)
         v8 = v8.transpose(0, 2, 1, 3)
         kv_native = False
+    dbq, dbkv = default_blocks(f"ita_{kind}_pallas")
     out = fused_attention(
         q8, k8, v8, scales.s_q, scales.s_k, scales.s_v, scales.s_out,
         q_offset=q_offset, kv_len=kv_len, causal=spec.causal,
         window=spec.window, kind=kind, adaptive=spec.softmax == "adaptive",
-        block_q=opts.get("block_q", 128), block_kv=opts.get("block_kv", 128),
-        kv_native=kv_native, interpret=opts.get("interpret"))
+        block_q=opts.get("block_q", dbq or 128),
+        block_kv=opts.get("block_kv", dbkv),
+        kv_native=kv_native, page_table=page_table,
+        interpret=opts.get("interpret"))
     if spec.layout == "bshd":
         out = jnp.swapaxes(out, 1, 2)                    # back to (B,S,H,D)
     if spec.out_dtype == "int8":

@@ -83,6 +83,9 @@ def _shapes(q, k, spec: AttentionSpec):
     elif spec.layout == "bhsd":
         hq, sq = q.shape[1], q.shape[2]
         hkv, skv = k.shape[1], k.shape[2]
+    elif spec.layout == "bhsd_paged":           # kv = (P, page, G, hd) pool
+        hq, sq = q.shape[1], q.shape[2]
+        skv, hkv = k.shape[1], k.shape[2]       # skv = one page here
     else:                                       # bhsd_bsgd: q bhsd, kv bsgd
         hq, sq = q.shape[1], q.shape[2]
         skv, hkv = k.shape[1], k.shape[2]
@@ -113,14 +116,16 @@ def _validate(q, k, v, spec: AttentionSpec, scales):
 
 def dispatch(q, k, v, *, spec: AttentionSpec, scales=None,
              q_offset: Any = 0, kv_len: Any = None,
-             backend: str | None = None, **opts):
+             page_table: Any = None, backend: str | None = None, **opts):
     """Run one attention computation through the registry.
 
     ``q``/``k``/``v``: rank-4 arrays in ``spec.layout``. Integer impls
     accept float tensors (quantized internally onto the matching scale)
     or pre-quantized int8 tensors (consumed as-is, e.g. int8 KV caches).
     ``q_offset``/``kv_len``: dynamic decode plumbing (logical position of
-    query 0; valid KV prefix). ``backend``: explicit override by name —
+    query 0; valid KV prefix). ``page_table`` (B, n_pages) int32 —
+    required by (and only by) the ``bhsd_paged`` layout, where ``k``/``v``
+    are a shared paged pool. ``backend``: explicit override by name —
     still capability-checked, so an ineligible (spec, backend) pair
     raises ``BackendUnsupported`` with the backend's stated reason.
     ``opts``: tuning knobs forwarded to the backend (``block_q``,
@@ -148,6 +153,13 @@ def dispatch(q, k, v, *, spec: AttentionSpec, scales=None,
             raise BackendUnsupported(
                 f"no registered backend supports {spec}; "
                 f"verdicts — {detail}")
+    if (spec.layout == "bhsd_paged") != (page_table is not None):
+        raise ValueError(
+            "page_table= is required by exactly the 'bhsd_paged' layout "
+            f"(layout={spec.layout!r}, page_table "
+            f"{'missing' if page_table is None else 'given'})")
     _validate(q, k, v, spec, scales)
+    if page_table is not None:
+        opts["page_table"] = page_table
     return b.run(q, k, v, spec, scales, q_offset=q_offset, kv_len=kv_len,
                  **opts)

@@ -23,8 +23,11 @@ SOFTMAXES = ("adaptive", "paper")
 # q-layout[_kv-layout]: "bshd" (model: batch, seq, heads, dim), "bhsd"
 # (kernel: batch, heads, seq, dim), "bhsd_bsgd" (decode engine: q in
 # kernel layout, K/V consumed cache-natively as (B, C, G, hd) ring
-# buffers via kernel index maps — no per-step transpose copies).
-LAYOUTS = ("bshd", "bhsd", "bhsd_bsgd")
+# buffers via kernel index maps — no per-step transpose copies),
+# "bhsd_paged" (continuous batching: q in kernel layout, K/V a shared
+# (num_pages, page_size, G, hd) pool consumed through per-sequence page
+# tables — dispatch requires the ``page_table=`` operand).
+LAYOUTS = ("bshd", "bhsd", "bhsd_bsgd", "bhsd_paged")
 SCALE_KINDS = ("per_tensor", "per_head")
 OUT_DTYPES = ("float", "int8")
 

@@ -1,4 +1,4 @@
-"""Typed int8 KV-cache ring-buffer state.
+"""Typed int8 KV-cache state: the contiguous ring buffer and the paged pool.
 
 ``KVCacheState`` replaces the plain ``{"k", "v", "pos", ...}`` dicts the
 serving stack used to pass around: same leaves, same scan/shard/donate
@@ -15,6 +15,20 @@ position of new queries (``q_offset``) derive from ``pos`` and are
 meta. ``k_scale``/``v_scale`` are optional per-(kv-)head quantization
 scales ``(G,)`` (the decode engine's finer-than-QAT grid); ``None`` when
 the cache rides the model's per-tensor QAT scales.
+
+``PagedKVState`` is the continuous-batching allocator: **one** shared
+``(num_pages, page_size, G, hd)`` int8 arena for the whole batch, a
+per-sequence page table translating logical KV pages to physical arena
+pages, and an on-device free stack. Logical semantics are *identical* to
+a ring of capacity ``n_pages * page_size`` (slot ``t % C``, same
+``pos``/``valid_len``/``q_offset``), so the fused kernels' paged layout
+is bit-identical to the ring path — but physically a sequence only holds
+``ceil(pos / page_size)`` pages, and ``release`` returns them to the
+pool the moment the sequence finishes: KV memory is O(tokens live), not
+O(B * max_len) reserved. Physical page 0 is the **parking page** — never
+allocated, it absorbs masked writes (dead batch slots, right-pad tokens)
+and backs unassigned page-table entries, so every scatter/gather stays
+in bounds without branches.
 """
 
 from __future__ import annotations
@@ -24,6 +38,23 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.common import MIN_BLOCK_KV
+
+
+def _align_capacity(capacity: int) -> int:
+    """Round a ring/pool capacity above one KV block up to a block
+    multiple, so the fused kernels' `_pad_seq` is statically a no-op on
+    the decode hot path (any block_kv dividing MIN_BLOCK_KV stays
+    pad-free)."""
+    capacity = max(capacity, 1)
+    if capacity > MIN_BLOCK_KV:
+        capacity = -(-capacity // MIN_BLOCK_KV) * MIN_BLOCK_KV
+    return capacity
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,8 +70,11 @@ class KVCacheState:
     @classmethod
     def init(cls, batch: int, capacity: int, n_kv_heads: int, head_dim: int,
              dtype=jnp.int8, per_head_scales: bool = False) -> "KVCacheState":
-        """Fresh (zeroed) ring-buffer cache."""
-        capacity = max(capacity, 1)
+        """Fresh (zeroed) ring-buffer cache. Capacities above one KV block
+        are rounded up to a ``MIN_BLOCK_KV`` multiple so the per-step
+        ``_pad_seq`` in the fused-attention plumbing is statically a
+        no-op (it asserts as much on the decode path)."""
+        capacity = _align_capacity(capacity)
         shape = (batch, capacity, n_kv_heads, head_dim)
         scales = (jnp.ones((n_kv_heads,), jnp.float32)
                   if per_head_scales else None)
@@ -106,7 +140,8 @@ class KVCacheState:
             v_t = jax.lax.dynamic_update_slice(self.v, v_q, (0, 0, 0, 0))
         return dataclasses.replace(self, k=k_t, v=v_t, pos=pos)
 
-    def decode_append(self, k_q: jax.Array, v_q: jax.Array) -> "KVCacheState":
+    def decode_append(self, k_q: jax.Array, v_q: jax.Array,
+                      live: jax.Array | None = None) -> "KVCacheState":
         """Append ``s_new`` decode tokens per sequence: row ``b``'s token
         ``pos[b] + i`` goes to slot ``(pos[b] + i) % C``. A batched
         scatter (``.at[batch, slots]``) rather than dynamic_update_slice:
@@ -116,23 +151,293 @@ class KVCacheState:
         steady-state decode, <= 8 for speculative bursts; a burst longer
         than the ring writes only its last ``C`` tokens (the survivors) —
         scattering all of them would hit duplicate slots, whose winner
-        JAX leaves unspecified."""
+        JAX leaves unspecified. ``live`` (B,) bool masks dead batch slots
+        (continuous batching): their writes are dropped and their ``pos``
+        does not advance."""
         b, s_new = k_q.shape[:2]
         cs = self.capacity
         start = max(s_new - cs, 0)
         slots = (self.pos[:, None] + start
                  + jnp.arange(s_new - start, dtype=jnp.int32)[None, :]) % cs
         bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
-        # unique_indices: consecutive slots mod C, count <= C — no
-        # collisions, so XLA can emit the cheap unordered scatter
-        k_t = self.k.at[bidx, slots].set(k_q[:, start:],
-                                         unique_indices=True)
-        v_t = self.v.at[bidx, slots].set(v_q[:, start:],
-                                         unique_indices=True)
-        return dataclasses.replace(self, k=k_t, v=v_t,
-                                   pos=self.pos + s_new)
+        if live is None:
+            # unique_indices: consecutive slots mod C, count <= C — no
+            # collisions, so XLA can emit the cheap unordered scatter
+            k_t = self.k.at[bidx, slots].set(k_q[:, start:],
+                                             unique_indices=True)
+            v_t = self.v.at[bidx, slots].set(v_q[:, start:],
+                                             unique_indices=True)
+            pos = self.pos + s_new
+        else:
+            # dead rows: out-of-bounds slot + mode="drop" discards the
+            # write without a branch (still unique within live rows)
+            slots = jnp.where(live[:, None], slots, cs)
+            k_t = self.k.at[bidx, slots].set(k_q[:, start:], mode="drop")
+            v_t = self.v.at[bidx, slots].set(v_q[:, start:], mode="drop")
+            pos = self.pos + s_new * live.astype(jnp.int32)
+        return dataclasses.replace(self, k=k_t, v=v_t, pos=pos)
 
 
 jax.tree_util.register_dataclass(
     KVCacheState, data_fields=("k", "v", "pos", "k_scale", "v_scale"),
+    meta_fields=())
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool
+# ---------------------------------------------------------------------------
+
+PARKING_PAGE = 0        # physical page 0: write sink / unassigned entries
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVState:
+    """Shared paged int8 KV pool + per-sequence page tables + free stack.
+
+    ``k``/``v``: ``(num_pages, page_size, G, hd)`` arena shared by every
+    sequence (and, at the model level, one arena per layer).
+    ``page_table``: ``(B, n_pages)`` int32 — logical KV page ``j`` of
+    sequence ``b`` lives in physical page ``page_table[b, j]``
+    (``PARKING_PAGE`` = unassigned). ``pos``: per-sequence stream length,
+    exactly as in ``KVCacheState`` — logical slot ``t % capacity`` with
+    ``capacity = n_pages * page_size``, so wrap/window semantics (and the
+    kernels' view of the bytes) match the ring bit-for-bit.
+    ``free_stack``/``free_top``: LIFO of free physical pages; entries
+    ``free_stack[:free_top]`` are free. Allocation happens *inside* jit
+    (a masked pop per page) so the fused generation scan never leaves the
+    device to grow a sequence.
+    """
+
+    k: Any                      # (P, page, G, hd)
+    v: Any                      # (P, page, G, hd)
+    page_table: Any             # (B, n_pages) int32
+    pos: Any                    # (B,) int32
+    free_stack: Any             # (P,) int32
+    free_top: Any               # () int32 — number of free pages
+    k_scale: Any = None         # (G,) f32 per-head scales, optional
+    v_scale: Any = None
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def init(cls, batch: int, capacity: int, n_kv_heads: int, head_dim: int,
+             dtype=jnp.int8, per_head_scales: bool = False, *,
+             page_size: int = MIN_BLOCK_KV,
+             num_pages: int | None = None) -> "PagedKVState":
+        """Fresh pool. ``capacity`` (per-sequence logical window) rounds
+        up to a ``page_size`` multiple; ``num_pages`` sizes the shared
+        arena (default: fully provisioned, ``B * pages_per_seq`` + the
+        parking page — pass less to oversubscribe under an admission
+        scheduler)."""
+        capacity = max(capacity, 1)
+        n_pages = _ceil_div(capacity, page_size)
+        if num_pages is None:
+            num_pages = batch * n_pages + 1
+        if num_pages < 2:
+            raise ValueError("num_pages must cover the parking page plus "
+                             "at least one allocatable page")
+        shape = (num_pages, page_size, n_kv_heads, head_dim)
+        scales = (jnp.ones((n_kv_heads,), jnp.float32)
+                  if per_head_scales else None)
+        # free pages are 1..P-1 (0 is parking); stack[:free_top] free,
+        # laid out so the first pop hands out page 1
+        stack = jnp.concatenate([
+            jnp.arange(num_pages - 1, 0, -1, dtype=jnp.int32),
+            jnp.zeros((1,), jnp.int32)])
+        return cls(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   page_table=jnp.zeros((batch, n_pages), jnp.int32),
+                   pos=jnp.zeros((batch,), jnp.int32),
+                   free_stack=stack,
+                   free_top=jnp.asarray(num_pages - 1, jnp.int32),
+                   k_scale=scales, v_scale=scales)
+
+    def with_scales(self, k_scale, v_scale) -> "PagedKVState":
+        return dataclasses.replace(self, k_scale=k_scale, v_scale=v_scale)
+
+    # -- geometry ---------------------------------------------------------
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[0]
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.page_table.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.pages_per_seq * self.page_size
+
+    @property
+    def batch(self) -> int:
+        return self.page_table.shape[0]
+
+    def pages_held(self) -> jax.Array:
+        """Physical pages currently backing each sequence, (B,) int32."""
+        return jnp.minimum(_ceil_div(self.pos, self.page_size),
+                           self.pages_per_seq)
+
+    def valid_len(self) -> jax.Array:
+        return jnp.minimum(self.pos, self.capacity)
+
+    def q_offset(self, s_new: int = 1) -> jax.Array:
+        return jnp.maximum(self.valid_len() - s_new, 0)
+
+    # -- allocation -------------------------------------------------------
+
+    def _alloc(self, need: jax.Array) -> "PagedKVState":
+        """Pop ``need[b]`` pages per row off the free stack into each
+        row's next unassigned page-table entries. Callers guarantee
+        ``sum(need) <= free_top`` (the admission scheduler's invariant;
+        ``tests/test_paged.py`` property-checks it) — an overdrawn pool
+        drives ``free_top`` negative, which ``oversubscribed`` exposes."""
+        b = need.shape[0]
+        npps = self.pages_per_seq
+        held = self.pages_held()
+        offs = jnp.cumsum(need) - need                     # exclusive
+        cols = jnp.arange(npps, dtype=jnp.int32)[None, :]
+        take = cols < need[:, None]                        # (B, npps)
+        sidx = self.free_top - 1 - (offs[:, None] + cols)
+        phys = self.free_stack[jnp.clip(sidx, 0, self.num_pages - 1)]
+        dest = jnp.where(take, held[:, None] + cols, npps)  # OOB -> drop
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        pt = self.page_table.at[bidx, dest].set(phys, mode="drop")
+        top = self.free_top - jnp.sum(take.astype(jnp.int32))
+        return dataclasses.replace(self, page_table=pt, free_top=top)
+
+    def oversubscribed(self) -> jax.Array:
+        """True when an allocation overdrew the pool (scheduler bug)."""
+        return self.free_top < 0
+
+    def release(self, finished: jax.Array) -> "PagedKVState":
+        """Return the pages of every row with ``finished[b]`` to the free
+        stack, clear those rows' tables and reset their ``pos`` to 0 —
+        the continuous-batching hand-back that makes a freed slot's
+        memory immediately admittable."""
+        finished = jnp.asarray(finished, jnp.bool_)
+        npps = self.pages_per_seq
+        held = self.pages_held()
+        give = finished[:, None] \
+            & (jnp.arange(npps, dtype=jnp.int32)[None, :] < held[:, None])
+        flat_give = give.reshape(-1)
+        flat_pages = self.page_table.reshape(-1)
+        rank = jnp.cumsum(flat_give.astype(jnp.int32)) - 1
+        dest = jnp.where(flat_give, self.free_top + rank, self.num_pages)
+        stack = self.free_stack.at[dest].set(flat_pages, mode="drop")
+        top = self.free_top + jnp.sum(flat_give.astype(jnp.int32))
+        pt = jnp.where(finished[:, None], PARKING_PAGE, self.page_table)
+        pos = jnp.where(finished, 0, self.pos)
+        return dataclasses.replace(self, page_table=pt, pos=pos,
+                                   free_stack=stack, free_top=top)
+
+    # -- writes -----------------------------------------------------------
+
+    def prefill_write(self, k_q: jax.Array, v_q: jax.Array,
+                      lengths: jax.Array | None = None) -> "PagedKVState":
+        """Bulk-write right-padded prompts for the whole batch (rows must
+        be fresh/released, ``pos == 0``). Same signature and logical
+        outcome as the ring's ``prefill_write`` minus wrap-eviction: a
+        prompt longer than ``capacity`` is refused (serving sizes the
+        window first). Only ``ceil(len/page_size)`` pages are allocated
+        per row — right-pad columns scatter into the parking page, so a
+        ragged batch holds pages for its *tokens*, not its padding."""
+        return self.write_prompts(k_q, v_q, lengths=lengths)
+
+    def write_prompts(self, k_q: jax.Array, v_q: jax.Array,
+                      lengths: jax.Array | None = None,
+                      slots: jax.Array | None = None) -> "PagedKVState":
+        """``prefill_write`` generalized to target batch ``slots``: row
+        ``i`` of ``k_q``/``v_q`` (n, S, G, hd) lands in batch slot
+        ``slots[i]`` (negative = dummy row, dropped entirely) — the
+        admission path that prefills newly arrived requests into slots
+        another sequence just released, with a fixed-width dispatch shape
+        regardless of how many requests actually arrived."""
+        n, s = k_q.shape[:2]
+        b = self.batch
+        ps = self.page_size
+        if lengths is None:
+            if s > self.capacity:
+                raise ValueError(
+                    f"paged prefill needs capacity >= prompt length "
+                    f"(got S={s} > C={self.capacity}); grow max_len/window")
+            new_pos = jnp.full((n,), s, jnp.int32)
+        else:
+            # Ragged: only the *valid* lengths must fit the window — the
+            # source may be wider than the pool's capacity (e.g. a
+            # block-aligned admission scratch); every column beyond a
+            # row's length scatters into the parking page regardless.
+            # Lengths are clamped so a misdeclared over-window row can
+            # never push pos past capacity (callers validate upstream).
+            new_pos = jnp.minimum(jnp.asarray(lengths, jnp.int32).reshape(n),
+                                  self.capacity)
+        if slots is None:
+            if n != b:
+                raise ValueError(f"full-batch prefill expects {b} rows, "
+                                 f"got {n} (pass slots= for a partial one)")
+            rows = jnp.arange(b, dtype=jnp.int32)
+            valid = jnp.ones((n,), jnp.bool_)
+        else:
+            rows = jnp.asarray(slots, jnp.int32).reshape(n)
+            valid = rows >= 0
+            rows = jnp.where(valid, rows, b)               # OOB -> drop
+        new_pos = new_pos * valid.astype(jnp.int32)
+
+        need_rows = _ceil_div(new_pos, ps)
+        need = jnp.zeros((b,), jnp.int32).at[rows].set(need_rows,
+                                                       mode="drop")
+        new = self._alloc(need)
+
+        t = jnp.arange(s, dtype=jnp.int32)
+        # rows == b clamps in the gather; the result is discarded below.
+        # Columns past the window (S > capacity sources) clamp to the last
+        # logical page — always pad columns, masked to parking below.
+        cols = jnp.minimum(t // ps, self.pages_per_seq - 1)
+        phys = new.page_table[jnp.minimum(rows, b - 1)][:, cols]     # (n, s)
+        real = valid[:, None] & (t[None, :] < new_pos[:, None])
+        phys = jnp.where(real, phys, PARKING_PAGE)
+        slot = jnp.broadcast_to((t % ps)[None, :], (n, s))
+        k_t = new.k.at[phys, slot].set(k_q)
+        v_t = new.v.at[phys, slot].set(v_q)
+        pos = self.pos.at[rows].set(new_pos, mode="drop")
+        return dataclasses.replace(new, k=k_t, v=v_t, pos=pos)
+
+    def decode_append(self, k_q: jax.Array, v_q: jax.Array,
+                      live: jax.Array | None = None) -> "PagedKVState":
+        """Append ``s_new`` decode tokens per sequence — the jit-safe hot
+        path: rows crossing a page boundary pop a fresh page off the free
+        stack *on device* (no host round-trip inside the fused scan);
+        once a row has wrapped its logical window its existing pages are
+        reused in place, exactly like the ring. ``live`` masks dead slots
+        (writes park, ``pos`` frozen)."""
+        b, s_new = k_q.shape[:2]
+        ps, cs = self.page_size, self.capacity
+        if live is None:
+            live = jnp.ones((b,), jnp.bool_)
+        live_i = live.astype(jnp.int32)
+        held = self.pages_held()
+        want = jnp.minimum(_ceil_div(self.pos + s_new, ps),
+                           self.pages_per_seq)
+        new = self._alloc((want - held) * live_i)
+
+        start = max(s_new - cs, 0)
+        n_eff = s_new - start
+        toks = (self.pos[:, None] + start
+                + jnp.arange(n_eff, dtype=jnp.int32)[None, :]) % cs
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        phys = new.page_table[bidx, toks // ps]            # (B, n_eff)
+        phys = jnp.where(live[:, None], phys, PARKING_PAGE)
+        k_t = new.k.at[phys, toks % ps].set(k_q[:, start:])
+        v_t = new.v.at[phys, toks % ps].set(v_q[:, start:])
+        return dataclasses.replace(new, k=k_t, v=v_t,
+                                   pos=self.pos + s_new * live_i)
+
+
+jax.tree_util.register_dataclass(
+    PagedKVState,
+    data_fields=("k", "v", "page_table", "pos", "free_stack", "free_top",
+                 "k_scale", "v_scale"),
     meta_fields=())

@@ -13,6 +13,30 @@ from repro.core.quant import SOFTMAX_SHIFT
 NEG_SENTINEL = -256          # below any int8 value; int32-overflow safe
 MASK_K = 31                  # shift that zeroes a masked element's term
 
+# Per-backend (block_q, block_kv) defaults, chosen by the
+# ``benchmarks/bench_kernels.py --sweep`` grid (VMEM working set stays
+# within one core's budget at d<=128 while the kv tile amortizes the DA
+# bookkeeping; the decode kernel has no q tiling — block_q is None).
+# These replace the hardcoded 128/128 that used to live in
+# ``attention/backends.py``; dispatch ``block_q=``/``block_kv=`` opts
+# still override per call.
+BLOCK_DEFAULTS = {
+    "ita_onepass_pallas": (128, 128),
+    "ita_twopass_pallas": (128, 128),
+    "ita_decode_pallas": (None, 128),
+}
+
+# Rings/pools allocated at a multiple of this never hit the `_pad_seq`
+# per-step pad-copy in the fused-attention plumbing (any block_kv that
+# divides it stays pad-free). ``KVCacheState.init`` block-aligns
+# capacities above one block to it.
+MIN_BLOCK_KV = 128
+
+
+def default_blocks(backend: str) -> tuple:
+    """(block_q, block_kv) defaults for a fused backend name."""
+    return BLOCK_DEFAULTS.get(backend, (128, 128))
+
 # Platforms with a compiled Pallas lowering; everything else (CPU CI
 # containers) runs the kernels in interpret mode.
 _COMPILED_PALLAS_PLATFORMS = ("tpu", "gpu")

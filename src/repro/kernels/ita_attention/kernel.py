@@ -38,6 +38,16 @@ Ragged batches: ``kv_len``/``q_offset`` are per-(batch·head) rows of the
 against *its own* valid prefix, so a batch of sequences at different
 positions decodes in one call with no padding to the longest. Scalars
 broadcast to all rows (the dense case).
+
+Paged KV pool: the ``*_paged`` entry points consume one shared
+``(num_pages, page_size, G, hd)`` int8 arena through a **page table**
+delivered as a scalar-prefetch operand — the KV BlockSpec index map reads
+``page_table[b, j]`` to translate logical KV tile ``j`` of sequence ``b``
+into a physical arena page, so scattered pages stream through the very
+same kernel bodies (``decode_kernel``/``onepass_kernel``) tile-for-tile.
+With ``block_kv == page_size`` the DA tile schedule is identical to the
+contiguous ring path, which is what keeps paged decode bit-identical to
+the ring (the ``ita_fused`` family invariant).
 """
 
 from __future__ import annotations
@@ -413,3 +423,120 @@ def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
                         pltpu.VMEM((sq, d), jnp.float32)],
         interpret=interpret,
     )(q_q, k_q, v_q, lmult, omult, meta)
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool variants: same kernel bodies, page-table-indexed KV blocks
+# ---------------------------------------------------------------------------
+
+def _swallow_pt(kern):
+    """Scalar-prefetch calling convention hands the page-table ref to the
+    kernel body as its first argument; the compute bodies never touch it
+    (all translation happens in the index maps), so drop it here — the
+    paged kernels stay byte-for-byte the ring kernels."""
+    def wrapped(pt_ref, *refs):
+        return kern(*refs)
+    return wrapped
+
+
+def ita_attention_decode_paged(q_q, k_pool, v_pool, page_table, logit_mult,
+                               out_mult, kv_len, *, q_offset=0,
+                               causal: bool = True, window: int = 0,
+                               adaptive: bool = True, kv_rep: int = 1,
+                               hq: int = 1, interpret: bool = True):
+    """Fused decode step over a paged KV pool.
+
+    ``q_q`` (BH, Sq<=8, D) int8; ``k_pool``/``v_pool``
+    ``(num_pages, page_size, G, D)`` int8 shared arena; ``page_table``
+    ``(B, n_pages)`` int32 maps each sequence's logical KV page to a
+    physical arena page (entries beyond the valid prefix may point
+    anywhere — those tiles are skipped/masked via ``kv_len``).
+
+    ``block_kv`` is the page size: logical tile ``j`` of kernel row ``r``
+    is DMA'd from ``pool[page_table[r // hq, j]]`` by a scalar-prefetch
+    index map, and the DA streaming schedule is identical to
+    ``ita_attention_decode`` at ``block_kv == page_size`` — paged decode
+    is bit-identical to the contiguous ring path (family ``ita_fused``).
+    """
+    bh, sq, d = q_q.shape
+    page = k_pool.shape[1]
+    n_pages = page_table.shape[1]
+    assert bh % hq == 0 and page_table.shape[0] * hq == bh, \
+        (bh, hq, page_table.shape)
+    kern = functools.partial(decode_kernel, causal=causal, window=window,
+                             adaptive=adaptive, bq=sq, bkv=page, kv_4d=True)
+    lmult, omult = _row_mults(logit_mult, out_mult, bh)
+    meta = _row_meta(kv_len, q_offset, bh)
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, d),
+        lambda r, j, pt: (pt[r // hq, j], 0, (r % hq) // kv_rep, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, sq, d), lambda b, j, pt: (b, 0, 0)),
+            kv_spec,
+            kv_spec,
+            pl.BlockSpec((1, 1), lambda b, j, pt: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, pt: (b, 0)),
+            pl.BlockSpec((1, 2), lambda b, j, pt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, sq, d), lambda b, j, pt: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((sq, 1), jnp.int32),
+                        pltpu.VMEM((sq, 1), jnp.int32),
+                        pltpu.VMEM((sq, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _swallow_pt(kern),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
+        interpret=interpret,
+    )(page_table, q_q, k_pool, v_pool, lmult, omult, meta)
+
+
+def ita_attention_onepass_paged(q_q, k_pool, v_pool, page_table, logit_mult,
+                                out_mult, kv_len, *, q_offset=0,
+                                causal: bool, window: int = 0,
+                                adaptive: bool = True, block_q: int = 128,
+                                kv_rep: int = 1, hq: int = 1,
+                                interpret: bool = True):
+    """Flash-style onepass over a paged KV pool (prefill-from-pool and
+    decode bursts longer than the decode kernel's single tile). Grid and
+    page translation as in ``ita_attention_decode_paged``, with the q
+    tiling axis of ``ita_attention_onepass`` restored."""
+    bh, sq, d = q_q.shape
+    page = k_pool.shape[1]
+    n_pages = page_table.shape[1]
+    bq = min(block_q, sq)
+    assert sq % bq == 0, (sq, bq)
+    assert bh % hq == 0 and page_table.shape[0] * hq == bh, \
+        (bh, hq, page_table.shape)
+    kern = functools.partial(onepass_kernel, causal=causal, window=window,
+                             adaptive=adaptive, bq=bq, bkv=page, kv_4d=True)
+    lmult, omult = _row_mults(logit_mult, out_mult, bh)
+    meta = _row_meta(kv_len, q_offset, bh)
+    kv_spec = pl.BlockSpec(
+        (1, page, 1, d),
+        lambda r, i, j, pt: (pt[r // hq, j], 0, (r % hq) // kv_rep, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, sq // bq, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j, pt: (b, i, 0)),
+            kv_spec,
+            kv_spec,
+            pl.BlockSpec((1, 1), lambda b, i, j, pt: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j, pt: (b, 0)),
+            pl.BlockSpec((1, 2), lambda b, i, j, pt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j, pt: (b, i, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.int32),
+                        pltpu.VMEM((bq, 1), jnp.int32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _swallow_pt(kern),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
+        interpret=interpret,
+    )(page_table, q_q, k_pool, v_pool, lmult, omult, meta)

@@ -37,20 +37,29 @@ import numpy as np
 from repro.core.quant import EPS_MAX
 from repro.kernels.common import resolve_interpret
 from repro.kernels.ita_attention.kernel import (ita_attention_decode,
+                                                ita_attention_decode_paged,
                                                 ita_attention_onepass,
+                                                ita_attention_onepass_paged,
                                                 ita_attention_twopass)
 
 KINDS = ("onepass", "twopass", "decode")
 
 
-def _pad_seq(x, mult):
+def _pad_seq(x, mult, hot: bool = False):
     """Zero-pad the seq axis (axis 1, any rank) to a multiple of ``mult``.
 
-    For decode this is a per-call copy of the whole KV ring whenever its
-    capacity exceeds one block but is not a block multiple — serving
-    callers that care (e.g. the fused generation loop) size their rings
-    to ``block_kv`` multiples so this is a no-op on the hot path."""
+    ``hot=True`` marks the decode KV ring: padding there would be a
+    per-step copy of the whole ring, so it is *statically forbidden* —
+    ``KVCacheState.init`` block-aligns ring capacities (MIN_BLOCK_KV),
+    making the pad a guaranteed no-op on the decode hot path, and this
+    assert keeps it that way."""
     pad = (-x.shape[1]) % mult
+    if pad and hot:
+        raise ValueError(
+            f"decode KV ring capacity {x.shape[1]} is not a block_kv="
+            f"{mult} multiple — a per-step pad-copy of the whole ring; "
+            f"allocate through KVCacheState.init (block-aligned) or pass "
+            f"a block_kv that divides the capacity")
     if pad:
         x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
     return x
@@ -81,9 +90,11 @@ def _per_row(x, b, h):
     "kv_native", "interpret"))
 def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
            causal, window, kind, adaptive, block_q, block_kv, kv_native,
-           interpret):
+           interpret, page_table=None):
     b, hq, sq, d = q_q.shape
-    if kv_native:
+    if page_table is not None:                  # paged pool (P, page, G, hd)
+        hkv = k_q.shape[2]
+    elif kv_native:
         skv, hkv = k_q.shape[1], k_q.shape[2]
     else:
         hkv, skv = k_q.shape[1], k_q.shape[2]
@@ -98,15 +109,38 @@ def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
     lmult = jnp.tile(lmult, b)
     omult = jnp.tile(omult, b)
 
+    if page_table is not None:
+        # Pages are blocks: block_kv == page_size by construction, so the
+        # pool is never padded/copied — tiles stream straight from the
+        # arena through the page-table index maps.
+        bq = min(block_q, max(8, sq))
+        qf = _pad_seq(q_q.reshape(b * hq, sq, d), bq)
+        skv = page_table.shape[1] * k_q.shape[1]
+        kv_len = _per_row(skv if kv_len is None else kv_len, b, hq)
+        q_offset = _per_row(q_offset, b, hq)
+        common = dict(q_offset=q_offset, causal=causal, window=window,
+                      adaptive=adaptive, kv_rep=rep, hq=hq,
+                      interpret=interpret)
+        if kind == "decode":
+            out = ita_attention_decode_paged(
+                qf, k_q, v_q, page_table, lmult, omult, kv_len, **common)
+        else:
+            out = ita_attention_onepass_paged(
+                qf, k_q, v_q, page_table, lmult, omult, kv_len, block_q=bq,
+                **common)
+        return out[:, :sq].reshape(b, hq, sq, d)
+
     bq = min(block_q, max(8, sq))
     bkv = min(block_kv, max(128, skv)) if skv >= 128 else skv
     qf = _pad_seq(q_q.reshape(b * hq, sq, d), bq)
     if kv_native:
-        kf = _pad_seq(k_q, bkv)
-        vf = _pad_seq(v_q, bkv)
+        kf = _pad_seq(k_q, bkv, hot=kind == "decode")
+        vf = _pad_seq(v_q, bkv, hot=kind == "decode")
     else:
-        kf = _pad_seq(k_q.reshape(b * hkv, skv, d), bkv)
-        vf = _pad_seq(v_q.reshape(b * hkv, skv, d), bkv)
+        kf = _pad_seq(k_q.reshape(b * hkv, skv, d), bkv,
+                      hot=kind == "decode")
+        vf = _pad_seq(v_q.reshape(b * hkv, skv, d), bkv,
+                      hot=kind == "decode")
 
     kv_len = _per_row(skv if kv_len is None else kv_len, b, hq)
     q_offset = _per_row(q_offset, b, hq)
@@ -138,6 +172,7 @@ def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
                     kind: str = "onepass", adaptive: bool = True,
                     block_q: int = 128, block_kv: int = 128,
                     kv_native: bool = False,
+                    page_table: jax.Array | None = None,
                     interpret: bool | None = None) -> jax.Array:
     """Quantized multi-head attention with the ITA integer softmax.
 
@@ -147,6 +182,12 @@ def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
     maps, no transpose/broadcast copies). GQA: Hkv must divide Hq; KV
     heads are shared per group via index maps — the broadcast never
     materializes.
+    ``page_table`` (B, n_pages) int32 switches K/V to a shared **paged
+    pool** ``(num_pages, page_size, Hkv, D)``: logical KV tile ``j`` of
+    sequence ``b`` streams from physical page ``page_table[b, j]``
+    (scalar-prefetch index maps; ``block_kv`` is the page size — the
+    ``block_kv`` argument is ignored). Bit-identical to the contiguous
+    ring path when ``page_size`` equals the ring's ``block_kv``.
     ``q_offset``: logical position of query 0 (decode: valid_kv - Sq).
     ``kv_len``: valid prefix of the KV cache (defaults to Skv).
     Both accept (B,) per-sequence vectors — the ragged batch path: each
@@ -156,8 +197,10 @@ def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
     assert kind in KINDS, kind
     assert not (kv_native and kind == "twopass"), \
         "cache-native KV layout serves the onepass/decode kernels only"
+    assert not (page_table is not None and kind == "twopass"), \
+        "the paged pool serves the onepass/decode kernels only"
     return _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, q_offset=q_offset,
                   kv_len=kv_len, causal=causal, window=window, kind=kind,
                   adaptive=adaptive, block_q=block_q, block_kv=block_kv,
-                  kv_native=kv_native,
+                  kv_native=kv_native, page_table=page_table,
                   interpret=resolve_interpret(interpret))

@@ -5,13 +5,20 @@ ITA integer path.
         --attention-impl ita --batch 4 --prompt-len 32 --gen 16
 
 Demonstrates the production serving loop via ``repro.runtime.generate``:
-quantized (int8) KV ring buffers (``repro.runtime.kv_cache``), integer
+quantized (int8) KV caches (``repro.runtime.kv_cache``), integer
 streaming-softmax attention at prefill, then **one** jitted ``lax.scan``
 over every decode step — sampling on device, no host round-trip per
 token. ``--ragged`` serves a mixed-length batch (right-padded prompts,
-per-sequence positions through the kernel meta — the precursor to
-continuous batching); ``--loop stepwise`` runs the legacy per-token host
-loop for comparison.
+per-sequence positions through the kernel meta); ``--paged`` swaps the
+per-sequence rings for the shared paged KV pool (bit-identical tokens);
+``--loop stepwise`` runs the legacy per-token host loop for comparison.
+
+``--continuous`` is the full continuous-batching server: a Poisson
+arrival trace (``--requests``/``--rate``) served through fixed decode
+slots over the paged pool — finished sequences release their pages
+between fused ``--segment``-step scan segments, the admission scheduler
+prefills queued requests into the freed slots, and throughput is
+reported as *sustained* tok/s over the whole trace.
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import attention as ATT
 from repro.configs.registry import ARCH_IDS, get_config
@@ -27,7 +35,7 @@ from repro.launch.hints import use_hints
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_model
 from repro.models.attention import make_spec
-from repro.runtime.generate import generate
+from repro.runtime.generate import ServeRequest, generate, serve_continuous
 
 
 def main():
@@ -60,6 +68,23 @@ def main():
                          "them toward tok/s, and exit early once all "
                          "finished (fused: while_loop; stepwise: a host "
                          "check that adds a per-step device sync)")
+    ap.add_argument("--paged", action="store_true",
+                    help="allocate the KV caches as shared paged pools "
+                         "(PagedKVState) instead of per-sequence rings — "
+                         "bit-identical tokens, O(live tokens) memory")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a Poisson arrival "
+                         "trace: --batch slots, paged pool, admission "
+                         "between --segment-step fused scan segments")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="trace length for --continuous")
+    ap.add_argument("--rate", type=float, default=0.25,
+                    help="mean arrivals per decode step for --continuous")
+    ap.add_argument("--segment", type=int, default=16,
+                    help="decode steps per fused segment (admission "
+                         "granularity) for --continuous")
+    ap.add_argument("--page-size", type=int, default=128,
+                    help="KV pool page size (tokens per page)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
@@ -76,6 +101,37 @@ def main():
         return
     mesh = make_host_mesh() if args.smoke else make_production_mesh()
     key = jax.random.PRNGKey(args.seed)
+
+    if args.continuous:
+        rng = np.random.default_rng(args.seed)
+        with mesh, use_hints(mesh):
+            params = init_model(key, cfg)
+            arrivals = np.cumsum(rng.exponential(1.0 / max(args.rate, 1e-6),
+                                                 args.requests)).astype(int)
+            reqs = [ServeRequest(
+                prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(
+                    max(1, args.prompt_len // 2), args.prompt_len + 1))
+                ).astype(np.int32),
+                gen=int(rng.integers(max(2, args.gen // 4), args.gen + 1)),
+                arrival=int(t)) for t in arrivals]
+            res = serve_continuous(
+                params, cfg, reqs, slots=args.batch, segment=args.segment,
+                max_len=args.prompt_len + args.gen,
+                page_size=args.page_size, temperature=args.temperature,
+                key=key if args.temperature > 0 else None,
+                eos_id=args.eos_id)
+        util = max((u for _, u in res.page_util), default=0.0)
+        print(f"[serve] arch={cfg.name} continuous slots={args.batch} "
+              f"segment={args.segment} page_size={args.page_size}")
+        print(f"[serve] {len(res.completed)}/{args.requests} requests, "
+              f"{res.steps} steps / {res.segments} segments / "
+              f"{res.admission_rounds} admission rounds")
+        print(f"[serve] {res.total_tokens} tokens in {res.wall_s:.2f} s "
+              f"-> sustained {res.tok_s:.1f} tok/s; latency p50 "
+              f"{res.latency_quantile(0.5)*1e3:.0f} ms p95 "
+              f"{res.latency_quantile(0.95)*1e3:.0f} ms; peak page util "
+              f"{util:.0%}")
+        return
 
     with mesh, use_hints(mesh):
         params = init_model(key, cfg)
@@ -96,10 +152,12 @@ def main():
         res = generate(params, cfg, prompts, args.gen, frontend=frontend,
                        temperature=args.temperature, key=sample_key,
                        prompt_lengths=lengths, eos_id=args.eos_id,
+                       paged=args.paged, page_size=args.page_size,
                        early_exit=args.eos_id is not None, loop=args.loop)
 
     print(f"[serve] arch={cfg.name} impl={cfg.attention_impl} "
-          f"loop={args.loop}" + (" ragged" if args.ragged else ""))
+          f"loop={args.loop}" + (" ragged" if args.ragged else "")
+          + (" paged" if args.paged else ""))
     if lengths is not None:
         print(f"[serve] prompt lengths: {lengths.tolist()}")
     print(f"[serve] prefill {args.batch}x{args.prompt_len} tokens in "

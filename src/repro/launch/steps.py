@@ -93,10 +93,10 @@ def make_prefill_step(cfg):
 
 
 def make_decode_step(cfg):
-    def decode_step(params, tokens, caches, pos0, frontend=None):
+    def decode_step(params, tokens, caches, pos0, frontend=None, live=None):
         logits, caches, _ = forward(params, tokens, cfg, mode="decode",
                                     frontend=frontend, caches=caches,
-                                    pos0=pos0)
+                                    pos0=pos0, live=live)
         return logits, caches
     return decode_step
 
@@ -197,6 +197,57 @@ def make_generate_loop(cfg, *, gen: int, sample: bool, eos_id: int | None,
         return toks.T, carry[5], jnp.asarray(steps, jnp.int32), carry[0]
 
     return loop
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching decode segment
+# ---------------------------------------------------------------------------
+
+def make_serve_segment(cfg, *, segment: int, sample: bool,
+                       eos_id: int | None, pad_id: int):
+    """One fused continuous-batching decode segment: a ``lax.scan`` of
+    ``segment`` steps over a fixed-slot batch, between two host admission
+    points.
+
+    Differences from ``make_generate_loop``: the carry tracks a per-slot
+    ``done`` mask *given by the host* (slots the scheduler left empty
+    start done) and a per-slot remaining-budget vector ``rem`` (each
+    request decodes its own ``gen``); every step passes ``live = ~done``
+    into the decode forward so finished/empty slots neither write their
+    KV pages nor advance positions — which is what lets the host release
+    a finished slot's pages at the segment boundary and hand them to a
+    queued request without the scan ever touching freed memory.
+
+    Returns ``seg(params, tok, caches, pos, key, temperature, done, rem,
+    frontend) -> (tokens (B, segment), caches, tok, pos, key, done, rem,
+    n_live)``; jit with ``donate_argnums=(2,)``.
+    """
+    decode = make_decode_step(cfg)
+
+    def seg(params, tok, caches, pos, key, temperature, done, rem,
+            frontend=None):
+        def body(carry, _):
+            caches, tok, pos, key, done, rem, n = carry
+            live = ~done
+            logits, caches = decode(params, tok, caches, pos, frontend,
+                                    live)
+            nxt, key = sample_token(logits, key, temperature, sample=sample)
+            nxt = jnp.where(done[:, None], pad_id, nxt)
+            n = n + jnp.sum(live).astype(jnp.int32)
+            rem = rem - live.astype(jnp.int32)
+            done = done | (rem <= 0)
+            if eos_id is not None:
+                done = done | (nxt[:, 0] == eos_id)
+            pos = pos + live.astype(jnp.int32)
+            return (caches, nxt, pos, key, done, rem, n), nxt[:, 0]
+
+        carry0 = (caches, tok, jnp.asarray(pos, jnp.int32), key, done, rem,
+                  jnp.zeros((), jnp.int32))
+        carry, toks = jax.lax.scan(body, carry0, None, length=segment)
+        caches, tok, pos, key, done, rem, n = carry
+        return toks.T, caches, tok, pos, key, done, rem, n
+
+    return seg
 
 
 # ---------------------------------------------------------------------------

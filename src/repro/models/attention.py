@@ -65,32 +65,39 @@ def _split_heads(x, n, hd):
 
 
 def make_spec(cfg, *, mode, causal, window, q_len=None,
-              has_s_out=True) -> ATT.AttentionSpec:
+              has_s_out=True, layout="bshd") -> ATT.AttentionSpec:
     """The layer's view of the engine: one spec per (cfg, call site).
     ``has_s_out=False`` declares a legacy param set without the output
     requant scale — the fused kernels then decline and the XLA paths
-    serve (PR-1 fallback semantics, now a capability)."""
+    serve (PR-1 fallback semantics, now a capability). ``layout``
+    deviates from the model's ``bshd`` only for paged-pool decode
+    (``bhsd_paged``), where the KV operand is the shared arena."""
     return ATT.AttentionSpec(
         mode=mode, impl=cfg.attention_impl, causal=causal, window=window,
         softcap=cfg.attn_softcap, query_scale=cfg.query_scale,
         softmax="paper" if cfg.softmax_impl == "ita_paper" else "adaptive",
-        layout="bshd", scale_kind="per_tensor", out_dtype="float",
+        layout=layout, scale_kind="per_tensor", out_dtype="float",
         has_s_out=has_s_out, q_len=q_len, n_heads=cfg.n_heads)
 
 
 def apply_attention(params, x, *, cfg, kind="global", positions=None,
-                    mem=None, cache=None, mode="train", lengths=None):
+                    mem=None, cache=None, mode="train", lengths=None,
+                    live=None):
     """Full attention layer: projections + RoPE + engine dispatch + output
     projection.
 
     ``kind``: global | local (cfg.local_window) | swa (cfg.window) | cross.
     ``cache`` (serve): ``KVCacheState`` ring buffer (int8 for quantized
-    impls, compute dtype for float), or a ``{"k8", "v8"}`` dict for the
+    impls, compute dtype for float) or a ``PagedKVState`` pool
+    (continuous batching — decode attends through the shared arena via
+    the ``bhsd_paged`` capability), or a ``{"k8", "v8"}`` dict for the
     static cross-attention memory; returns (y, new_cache).
     ``lengths`` (B,): ragged prefill — per-sequence valid prompt lengths
     of a right-padded batch; the ring buffer records them as each row's
     stream position so decode continues raggedly (causal masking keeps
     valid rows exact; pad rows are garbage the caller never reads).
+    ``live`` (B,): decode-time slot mask — dead slots (continuous
+    batching) skip the cache write and position advance.
     """
     d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = x.dtype
@@ -134,10 +141,11 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
     quant_cache = cfg.attention_impl != "float"
 
     def run(qq, kk, vv, *, mode, causal=causal, window=window,
-            q_offset=0, kv_len=None):
+            q_offset=0, kv_len=None, layout="bshd", page_table=None):
+        q_len = qq.shape[2] if layout == "bhsd_paged" else qq.shape[1]
         spec = make_spec(cfg, mode=mode, causal=causal, window=window,
-                         q_len=qq.shape[1],
-                         has_s_out=scales.s_out is not None)
+                         q_len=q_len, has_s_out=scales.s_out is not None,
+                         layout=layout)
         # cfg.attention_backend is a *preference*: it pins the backend at
         # every call site it can serve (no backend serves all of
         # train/prefill/decode), and capability dispatch covers the rest.
@@ -147,6 +155,7 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
             backend = None
         out = ATT.dispatch(qq, kk, vv, spec=spec, scales=scales,
                            q_offset=q_offset, kv_len=kv_len,
+                           page_table=page_table,
                            backend=backend, q_chunk=cfg.attn_q_chunk,
                            kv_chunk=cfg.attn_kv_chunk,
                            scan_unroll=cfg.scan_unroll)
@@ -171,10 +180,20 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
                                         lengths=lengths)
     else:                                           # decode append
         s_new = q.shape[1]
-        new_cache = cache.decode_append(_q(k, "s_k"), _q(v, "s_v"))
-        y = run(q, new_cache.k, new_cache.v, mode=mode,
-                q_offset=new_cache.q_offset(s_new),
-                kv_len=new_cache.valid_len())
+        new_cache = cache.decode_append(_q(k, "s_k"), _q(v, "s_v"),
+                                        live=live)
+        if isinstance(new_cache, ATT.PagedKVState):
+            # paged pool: q in kernel layout, K/V = the shared arena read
+            # through this layer's page table (bhsd_paged capability)
+            y = run(jnp.swapaxes(q, 1, 2), new_cache.k, new_cache.v,
+                    mode=mode, q_offset=new_cache.q_offset(s_new),
+                    kv_len=new_cache.valid_len(), layout="bhsd_paged",
+                    page_table=new_cache.page_table)
+            y = jnp.swapaxes(y, 1, 2)
+        else:
+            y = run(q, new_cache.k, new_cache.v, mode=mode,
+                    q_offset=new_cache.q_offset(s_new),
+                    kv_len=new_cache.valid_len())
 
     y = y.reshape(*y.shape[:-2], h * hd) @ params["wo"].astype(dt)
     y = hints.constrain(y, "batch", "seq", None)

@@ -77,14 +77,25 @@ def init_block(key, cfg, kind: str):
     return p
 
 
-def init_block_cache(cfg, kind: str, batch: int, max_len: int):
-    """Zero cache template for one block (None entries where stateless)."""
-    from repro.attention import KVCacheState
+def init_block_cache(cfg, kind: str, batch: int, max_len: int,
+                     paged: bool = False, page_size: int = 128,
+                     num_pages: int | None = None):
+    """Zero cache template for one block (None entries where stateless).
+
+    ``paged=True`` allocates attention KV as ``PagedKVState`` pools (one
+    shared arena + page tables per layer) instead of per-sequence rings —
+    the continuous-batching layout; ``num_pages`` sizes each layer's
+    arena (None = fully provisioned)."""
+    from repro.attention import KVCacheState, PagedKVState
     g, hd = cfg.n_kv_heads, cfg.head_dim
     quant = cfg.attention_impl != "float"
     kv_dt = jnp.int8 if quant else cfg.compute_dtype()
 
     def kv_cache(size):
+        if paged:
+            return PagedKVState.init(batch, size, g, hd, dtype=kv_dt,
+                                     page_size=page_size,
+                                     num_pages=num_pages)
         return KVCacheState.init(batch, size, g, hd, dtype=kv_dt)
 
     if kind in ("attn", "enc"):
@@ -98,7 +109,8 @@ def init_block_cache(cfg, kind: str, batch: int, max_len: int):
             "k8": jnp.zeros((batch, cfg.n_frontend_tokens, g, hd), kv_dt),
             "v8": jnp.zeros((batch, cfg.n_frontend_tokens, g, hd), kv_dt)}}
     if kind == "attn_cross":
-        c = init_block_cache(cfg, "attn", batch, max_len)
+        c = init_block_cache(cfg, "attn", batch, max_len, paged=paged,
+                             page_size=page_size, num_pages=num_pages)
         c["cross"] = init_block_cache(cfg, "cross", batch, max_len)["mix"]
         return c
     if kind == "rglru":
@@ -110,7 +122,7 @@ def init_block_cache(cfg, kind: str, batch: int, max_len: int):
 
 
 def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode,
-                lengths=None):
+                lengths=None, live=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     cm = None if cache is None else cache.get("mix")
@@ -126,7 +138,8 @@ def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode,
         h = apply_norm(p["norm1"], x, cfg.norm_type)
         y, new_mix = A.apply_attention(p["attn"], h, cfg=cfg, kind=akind,
                                        positions=positions, mem=mem,
-                                       cache=cm, mode=mode, lengths=lengths)
+                                       cache=cm, mode=mode, lengths=lengths,
+                                       live=live)
         if kind == "cross":
             y = y * jnp.tanh(p["gate_attn"]).astype(y.dtype)
         x = residual(y, "post_norm1")
@@ -147,7 +160,8 @@ def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode,
         h = apply_norm(p["norm1"], x, cfg.norm_type)
         y, new_self = A.apply_attention(p["attn"], h, cfg=cfg, kind="global",
                                         positions=positions, cache=cm,
-                                        mode=mode, lengths=lengths)
+                                        mode=mode, lengths=lengths,
+                                        live=live)
         x = x + y
         h = apply_norm(p["norm_x"], x, cfg.norm_type)
         y, new_cross = A.apply_attention(
@@ -200,15 +214,20 @@ def init_group(key, cfg, pattern, n_periods):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 
 
-def init_group_cache(cfg, pattern, n_periods, batch, max_len):
-    tmpl = tuple(init_block_cache(cfg, kind, batch, max_len)
+def init_group_cache(cfg, pattern, n_periods, batch, max_len, paged=False,
+                     page_size=128, num_pages=None):
+    # broadcast (not zero) the per-block template over the period axis:
+    # ring leaves are all-zero either way, but the paged pool's free
+    # stack / free_top initialization must survive the stacking
+    tmpl = tuple(init_block_cache(cfg, kind, batch, max_len, paged=paged,
+                                  page_size=page_size, num_pages=num_pages)
                  for kind in pattern)
     return jax.tree.map(
-        lambda a: jnp.zeros((n_periods,) + a.shape, a.dtype), tmpl)
+        lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape), tmpl)
 
 
 def apply_group(params, x, cfg, pattern, *, positions, mem, caches, mode,
-                lengths=None):
+                lengths=None, live=None):
     """Scan the group over its periods. Returns (x, new_caches, aux_sum)."""
 
     def body(carry, xs):
@@ -221,7 +240,7 @@ def apply_group(params, x, cfg, pattern, *, positions, mem, caches, mode,
             xc, nc, a = apply_block(pparams[i], xc, kind, cfg,
                                     positions=positions, mem=mem,
                                     cache=blk_cache, mode=mode,
-                                    lengths=lengths)
+                                    lengths=lengths, live=live)
             new_caches.append(nc)
             aux = aux + a
         ys = None if pcache is None else tuple(new_caches)
@@ -303,7 +322,7 @@ def _encode(params, cfg, frontend, mode):
 
 
 def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
-            pos0=None, lengths=None, skip_unembed=False):
+            pos0=None, lengths=None, live=None, skip_unembed=False):
     """tokens (B, S) int32. Returns (logits, new_caches, aux).
 
     ``pos0``: first token's position — a scalar (lockstep decode) or a
@@ -311,6 +330,9 @@ def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
     marks a ragged *prefill* of right-padded prompts: the KV caches
     record per-sequence stream lengths so decode continues each row at
     its own position (pad columns are causally invisible to valid rows).
+    ``live`` (B,) bool marks which batch slots are real sequences during
+    decode (continuous batching): dead slots neither write their caches
+    nor advance positions, so released pages are never touched.
     """
     dt = cfg.compute_dtype()
     x = embed(params["embed"], tokens, dt)
@@ -343,7 +365,8 @@ def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
         g_cache = None if caches is None else caches[gi]
         x, nc, aux = apply_group(params["groups"][gi], x, cfg, pattern,
                                  positions=positions, mem=mem,
-                                 caches=g_cache, mode=mode, lengths=lengths)
+                                 caches=g_cache, mode=mode, lengths=lengths,
+                                 live=live)
         aux_total = aux_total + aux
         if new_caches is not None:
             new_caches.append(nc)
@@ -358,8 +381,13 @@ def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
         aux_total
 
 
-def init_caches(cfg, batch: int, max_len: int):
-    return tuple(init_group_cache(cfg, pat, n, batch, max_len)
+def init_caches(cfg, batch: int, max_len: int, *, paged: bool = False,
+                page_size: int = 128, num_pages: int | None = None):
+    """Per-group cache pytrees. ``paged=True`` swaps the per-sequence KV
+    rings for shared paged pools (continuous-batching layout; one arena
+    per layer, sized by ``num_pages`` — None fully provisions)."""
+    return tuple(init_group_cache(cfg, pat, n, batch, max_len, paged=paged,
+                                  page_size=page_size, num_pages=num_pages)
                  for pat, n in cfg.layer_groups)
 
 

@@ -20,7 +20,15 @@ Ragged batches: pass ``prompt_lengths`` (B,) for right-padded prompts —
 each sequence prefills, positions and decodes at its own length through
 the per-row kernel meta (no padding to the longest prompt's position).
 ``loop="stepwise"`` keeps the legacy per-step host loop (one dispatch
-per token) as the parity/benchmark reference.
+per token) as the parity/benchmark reference. ``paged=True`` swaps the
+per-sequence rings for shared paged KV pools (bit-identical tokens).
+
+``serve_continuous`` is the continuous-batching server on top: a fixed-
+slot decode batch over the paged pool, fused ``lax.scan`` segments with
+host admission between them — finished sequences release their pages,
+arrived requests prefill into the freed slots, and throughput is
+sustained tok/s over the whole arrival trace (see DESIGN.md §Paged KV +
+continuous-batching dataflow).
 """
 
 from __future__ import annotations
@@ -70,26 +78,86 @@ class GenerateResult:
         return self.n_decode_tokens / max(self.decode_s, 1e-9)
 
 
+def _first_paged(caches):
+    """First PagedKVState node in a cache pytree (period-stacked leaves),
+    or None — how the serving stack sniffs the cache layout."""
+    from repro.attention import PagedKVState
+    for node in jax.tree.leaves(
+            caches, is_leaf=lambda x: isinstance(x, PagedKVState)):
+        if isinstance(node, PagedKVState):
+            return node
+    return None
+
+
+def _paged_geometry(paged):
+    """(batch, num_pages, page_size) of a period-stacked PagedKVState."""
+    return (paged.page_table.shape[1], paged.k.shape[1], paged.k.shape[2])
+
+
+def _validate_pool_provision(caches, batch: int, tokens_per_seq: int):
+    """Lockstep generate() has no admission scheduler rationing pages, so
+    an undersized pool would overdraw the on-device allocator mid-scan
+    and silently double-book pages — refuse statically instead. The
+    worst case is exact: every sequence grows to min(tokens, window)."""
+    from repro.attention import PagedKVState
+    for node in jax.tree.leaves(
+            caches, is_leaf=lambda x: isinstance(x, PagedKVState)):
+        if not isinstance(node, PagedKVState):
+            continue
+        num_pages, page = node.k.shape[1], node.k.shape[2]
+        npps = node.page_table.shape[2]
+        per_seq = min(-(-min(tokens_per_seq, npps * page) // page), npps)
+        if batch * per_seq > num_pages - 1:
+            raise ValueError(
+                f"paged pool undersized for lockstep generate: {batch} "
+                f"sequences x {per_seq} pages each > {num_pages - 1} "
+                f"allocatable pages (num_pages={num_pages}, page_size="
+                f"{page}) — raise num_pages, or serve through "
+                f"serve_continuous, whose admission scheduler rations an "
+                f"oversubscribed pool")
+
+
 def _validate_caches(caches, cfg, batch: int, max_len: int):
     """A reused ``caches=`` pytree must match what this call would have
-    allocated — silently decoding into wrong-capacity rings corrupts
-    positions/eviction."""
+    allocated — silently decoding into wrong-capacity rings (or
+    wrong-geometry page tables) corrupts positions/eviction/allocation.
+    Paged caches are validated against the paged allocation of the same
+    batch/max_len, with the mismatched field named (batch / pool size /
+    page size / page-table width)."""
     from repro.models import init_caches
+    paged = _first_paged(caches)
+    kwargs = {}
+    detail = f"batch ({batch}) and max_len ({max_len})"
+    if paged is not None:
+        pt_batch, num_pages, page_size = _paged_geometry(paged)
+        if pt_batch != batch:
+            raise ValueError(
+                f"caches= batch mismatch: page tables hold {pt_batch} "
+                f"slots but this call decodes batch={batch}")
+        # pool size and page size are free choices (oversubscription /
+        # granularity) — validate the rest of the tree against them
+        kwargs = dict(paged=True, page_size=page_size, num_pages=num_pages)
+        detail += (f", pool size ({num_pages} pages) and page size "
+                   f"({page_size})")
     expected = jax.eval_shape(functools.partial(init_caches, cfg, batch,
-                                                max_len))
+                                                max_len, **kwargs))
     exp_leaves, exp_tree = jax.tree_util.tree_flatten(expected)
-    got_leaves, got_tree = jax.tree_util.tree_flatten(caches)
+    got = jax.tree_util.tree_flatten_with_path(caches)[0]
+    got_tree = jax.tree_util.tree_structure(caches)
     if exp_tree != got_tree:
         raise ValueError(
             f"caches= structure does not match init_caches(cfg, batch="
-            f"{batch}, max_len={max_len}) for {cfg.name!r} — pass the "
-            f"max_len the caches were allocated with")
-    for e, g in zip(exp_leaves, got_leaves):
+            f"{batch}, max_len={max_len}"
+            + (", paged=True" if paged is not None else "") +
+            f") for {cfg.name!r} — pass the max_len the caches were "
+            f"allocated with")
+    for e, (path, g) in zip(exp_leaves, got):
         if e.shape != g.shape or e.dtype != g.dtype:
+            field = jax.tree_util.keystr(path)
             raise ValueError(
-                f"caches= leaf mismatch: expected {e.shape}/{e.dtype}, got "
-                f"{g.shape}/{g.dtype} — reused caches must match this "
-                f"call's batch ({batch}) and max_len ({max_len})")
+                f"caches= leaf {field} mismatch: expected "
+                f"{e.shape}/{e.dtype}, got {g.shape}/{g.dtype} — reused "
+                f"caches must match this call's {detail}")
 
 
 def _validate_ragged(cfg, prompt_lengths, prompt_len: int):
@@ -123,17 +191,22 @@ def _validate_ragged(cfg, prompt_lengths, prompt_len: int):
 
 def generate(params, cfg, prompts, gen: int, *, frontend=None,
              temperature: float = 0.0, key=None, max_len: int | None = None,
-             caches=None, prompt_lengths=None, eos_id: int | None = None,
-             pad_id: int = 0, loop: str = "fused",
-             early_exit: bool = False) -> GenerateResult:
+             caches=None, paged: bool = False, page_size: int = 128,
+             num_pages: int | None = None, prompt_lengths=None,
+             eos_id: int | None = None, pad_id: int = 0,
+             loop: str = "fused", early_exit: bool = False) -> GenerateResult:
     """Prefill the prompt batch, then decode ``gen`` tokens on-device.
 
     ``prompts`` (B, S) int32, right-padded when ``prompt_lengths`` (B,)
-    declares a ragged batch. ``max_len`` sizes the KV ring buffers
-    (default S + gen; smaller values window-evict — a multiple of the
-    decode kernel's 128-wide KV block avoids a per-step pad copy of the
-    ring when capacity exceeds one block). Pass ``caches`` to reuse
-    pre-allocated buffers across calls (validated against batch/max_len).
+    declares a ragged batch. ``max_len`` sizes the KV caches (default
+    S + gen; smaller values window-evict; ``KVCacheState.init``
+    block-aligns capacities above one KV block, so the decode kernels'
+    per-step ring pad is statically a no-op). ``paged=True`` allocates
+    the KV as shared paged pools (``PagedKVState``; bit-identical tokens
+    to the ring layout at ``page_size`` = the ring's KV block) — the
+    continuous-batching layout, also accepted via ``caches=``. Pass
+    ``caches`` to reuse pre-allocated buffers across calls (validated
+    against batch/max_len and, for paged caches, the pool geometry).
     ``eos_id``: sequences that emit it are masked to
     ``pad_id`` and stop counting toward ``decode_tok_s``; with
     ``early_exit=True`` decoding stops once every sequence finished
@@ -154,17 +227,14 @@ def generate(params, cfg, prompts, gen: int, *, frontend=None,
         return GenerateResult(tokens=jnp.zeros((b, 0), jnp.int32),
                               prefill_s=0.0, decode_s=0.0, decode_steps=0,
                               n_decode_tokens=0)
-    # A capacity > 128 that is not a block_kv multiple makes the kernel
-    # plumbing pad-copy the ring per step; rounding up here is NOT free
-    # either (bigger scan-carry copies cost more than the pad on CPU) —
-    # callers chasing peak decode tok/s should pass a block-multiple
-    # max_len and let the ring window-evict.
     max_len = max_len or prompt_len + gen
     prefill, decode = _steps(cfg)
     if caches is None:
-        caches = init_caches(cfg, b, max_len=max_len)
+        caches = init_caches(cfg, b, max_len=max_len, paged=paged,
+                             page_size=page_size, num_pages=num_pages)
     else:
         _validate_caches(caches, cfg, b, max_len)
+    _validate_pool_provision(caches, b, prompt_len + gen)
     lengths = None
     if prompt_lengths is not None:
         lengths = _validate_ragged(cfg, prompt_lengths, prompt_len)
@@ -215,3 +285,361 @@ def generate(params, cfg, prompts, gen: int, *, frontend=None,
     return GenerateResult(tokens=tokens, prefill_s=t_prefill,
                           decode_s=t_decode, decode_steps=steps_run,
                           n_decode_tokens=n_decode)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: paged pool + admission scheduler + fused segments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One serving request of an arrival trace. ``arrival`` is in virtual
+    time units = decode steps (the scheduler's clock), ``gen`` counts all
+    generated tokens including the one sampled from prefill."""
+    prompt: Any                      # (S,) int32 token ids
+    gen: int
+    arrival: int = 0
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    index: int                       # position in the submitted trace
+    arrival: int                     # virtual (step) arrival time
+    admitted_step: int               # step count when prefilled into a slot
+    finished_step: int               # step count when the slot freed
+    arrived_s: float                 # wall-clock when first admittable
+    finished_s: float                # wall-clock at the freeing boundary
+    tokens: Any                      # (gen,) int32 generated ids
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.arrived_s
+
+
+@dataclasses.dataclass
+class ServeResult:
+    completed: list                  # CompletedRequest, completion order
+    wall_s: float                    # whole-trace wall clock
+    steps: int                       # decode steps executed
+    segments: int                    # fused segments dispatched
+    admission_rounds: int            # prefill dispatches
+    page_util: list                  # (step, fraction of pool pages held)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(int(np.asarray(c.tokens).size) for c in self.completed)
+
+    @property
+    def tok_s(self) -> float:
+        return self.total_tokens / max(self.wall_s, 1e-9)
+
+    def latency_quantile(self, q: float) -> float:
+        lats = sorted(c.latency_s for c in self.completed)
+        if not lats:
+            return 0.0
+        return lats[min(int(q * len(lats)), len(lats) - 1)]
+
+
+@functools.lru_cache(maxsize=32)
+def _serve_segment_fn(cfg, segment, sample, eos_id, pad_id):
+    from repro.launch.steps import make_serve_segment
+    seg = make_serve_segment(cfg, segment=segment, sample=sample,
+                             eos_id=eos_id, pad_id=pad_id)
+    return jax.jit(seg, donate_argnums=(2,))
+
+
+def _is_kv_state(x):
+    from repro.attention import KVCacheState, PagedKVState
+    return isinstance(x, (KVCacheState, PagedKVState))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _release_slots(caches, finished):
+    """Return every finished slot's pages (all layers) to the free
+    stacks."""
+    from repro.attention import PagedKVState
+
+    def rel(node):
+        if isinstance(node, PagedKVState):
+            return jax.vmap(lambda p: p.release(finished))(node)
+        return node
+
+    return jax.tree.map(rel, caches, is_leaf=_is_kv_state)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _admit_state(tok, pos, done, rem, slot_ids, tok0, lengths, new_done,
+                 new_rem):
+    """One dispatch for the per-slot scalar state of an admission round
+    (fixed-width: padding rows carry slot_id -1 and drop out)."""
+    valid = slot_ids >= 0
+    rows = jnp.where(valid, slot_ids, tok.shape[0])        # OOB -> drop
+    tok = tok.at[rows].set(tok0, mode="drop")
+    pos = pos.at[rows].set(lengths, mode="drop")
+    done = done.at[rows].set(new_done, mode="drop")
+    rem = rem.at[rows].set(new_rem, mode="drop")
+    return tok, pos, done, rem
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _adopt_prompts(pool, temp, slot_ids, lengths):
+    """Copy freshly prefilled (ring) K/V bytes into pool pages at the
+    assigned slots — the admission hand-off. ``slot_ids`` (n,) int32,
+    negative entries are padding rows of the fixed-width admission batch
+    and are dropped. The ring holds exactly the quantized bytes decode
+    will read, so adopted pages are bit-identical to having prefilled
+    into the pool directly."""
+    from repro.attention import PagedKVState
+
+    def one(p, t):
+        if isinstance(p, PagedKVState):
+            return jax.vmap(
+                lambda pp, tt: pp.write_prompts(tt.k, tt.v, lengths=lengths,
+                                                slots=slot_ids))(p, t)
+        return p
+
+    return jax.tree.map(one, pool, temp, is_leaf=_is_kv_state)
+
+
+def _validate_serve_cfg(cfg):
+    from repro import attention as ATT
+    from repro.models.attention import make_spec
+    kinds = {k for pat, _ in cfg.layer_groups for k in pat}
+    if not kinds <= {"attn", "local", "swa"}:
+        raise ValueError(
+            f"continuous batching serves decoder-only attention stacks "
+            f"(got block kinds {sorted(kinds)})")
+    if not cfg.causal:
+        raise ValueError("continuous batching needs causal attention")
+    for kind in kinds:
+        window = {"attn": 0, "local": cfg.local_window,
+                  "swa": cfg.window}[kind]
+        spec = make_spec(cfg, mode="decode", causal=True, window=window,
+                         q_len=1, layout="bhsd_paged")
+        eligible = ATT.list_backends(spec)
+        if not eligible:
+            reasons = "; ".join(f"{n}: {r}" for n, r in
+                                ATT.backend_reasons(spec).items())
+            raise ValueError(
+                f"no attention backend serves the paged decode spec for "
+                f"{kind!r} blocks of {cfg.name!r} — {reasons}")
+
+
+def serve_continuous(params, cfg, requests, *, slots: int,
+                     segment: int = 16, max_len: int | None = None,
+                     page_size: int = 128, num_pages: int | None = None,
+                     temperature: float = 0.0, key=None,
+                     eos_id: int | None = None, pad_id: int = 0,
+                     audit=None) -> ServeResult:
+    """Serve an arrival trace with continuous batching over a paged pool.
+
+    A fixed-slot decode batch (``slots`` wide) runs fused ``lax.scan``
+    segments of ``segment`` steps; between segments the host scheduler
+    (1) releases the pages of every finished sequence back to the shared
+    pool, (2) admits arrived requests into freed slots — one fixed-shape
+    ragged prefill for up to ``slots`` requests per round, adopted into
+    freshly allocated pages — and (3) reads back the segment's tokens.
+    Virtual time = decode steps (request ``arrival`` is in steps);
+    throughput is **sustained**: total generated tokens over the whole
+    trace wall clock, including prefills and admission gaps.
+
+    Admission reserves each request's worst-case page need
+    (``ceil((len + gen) / page_size)``, capped at the per-slot window) up
+    front, so the on-device allocator can never be overdrawn mid-segment
+    — the invariant ``tests/test_paged.py`` property-checks. ``audit``
+    (testing hook) is called after every admission round with the live
+    cache pytree and the slot→request map.
+
+    Requests decode greedily (or with temperature sampling when ``key``
+    is given) until ``gen`` tokens or ``eos_id``. Greedy serving is
+    bit-identical to generating each request alone; sampled serving
+    shares one PRNG stream across slots, so a request's draws depend on
+    co-scheduled traffic (valid samples, not reproducible per request).
+    Returns ``ServeResult`` with per-request latencies and page-pool
+    utilization samples.
+    """
+    from repro.launch.steps import sample_token
+    from repro.models import init_caches
+
+    _validate_serve_cfg(cfg)
+    requests = list(requests)
+    if not requests:
+        return ServeResult([], 0.0, 0, 0, 0, [])
+    prompt_pad = max(int(np.asarray(r.prompt).size) for r in requests)
+    longest = max(int(np.asarray(r.prompt).size) + r.gen for r in requests)
+    max_len = max_len or longest
+    sample = temperature > 0.0 and key is not None
+    temp_arr = jnp.asarray(temperature if sample else 1.0, jnp.float32)
+    key = jax.random.PRNGKey(0) if key is None else key
+
+    caches = init_caches(cfg, slots, max_len=max_len, paged=True,
+                         page_size=page_size, num_pages=num_pages)
+    geo = _first_paged(caches)
+    pool_pages = geo.k.shape[1] - 1                # minus parking
+    pages_per_seq = geo.page_table.shape[2]
+    prefill, _ = _steps(cfg)
+    seg_fn = _serve_segment_fn(cfg, segment, sample, eos_id, pad_id)
+
+    def pages_for(req):
+        n = int(np.asarray(req.prompt).size) + req.gen
+        return min(-(-n // page_size), pages_per_seq)
+
+    capacity = pages_per_seq * page_size
+    for idx, r in enumerate(requests):
+        plen = int(np.asarray(r.prompt).size)
+        if plen > capacity:
+            raise ValueError(
+                f"request {idx}: prompt length {plen} exceeds the per-slot "
+                f"window {capacity}; raise max_len")
+        if pages_for(r) > pool_pages:
+            raise ValueError(
+                f"request {idx} needs {pages_for(r)} pages but the pool "
+                f"has {pool_pages}; raise num_pages")
+
+    # reusable ring scratch for admission prefills (fully overwritten by
+    # every ragged prefill — allocated once, not per round)
+    scratch = init_caches(cfg, slots, max_len=prompt_pad)
+
+    # scheduler state (host)
+    order = sorted(range(len(requests)), key=lambda i: requests[i].arrival)
+    queue = list(order)
+    slot_req = [None] * slots                      # request index per slot
+    reserved = [0] * slots                         # pages reserved per slot
+    arrived_wall = {}
+    emitted = {i: [] for i in range(len(requests))}
+    admitted_step = {}
+    completed = []
+    page_util = []
+
+    # device-side slot state
+    tok = jnp.zeros((slots, 1), jnp.int32)
+    pos = jnp.zeros((slots,), jnp.int32)
+    done = jnp.ones((slots,), jnp.bool_)           # empty slots are dead
+    rem = jnp.zeros((slots,), jnp.int32)
+
+    step = 0
+    segments = 0
+    rounds = 0
+    t0 = time.perf_counter()
+
+    def finish(slot, now_s):
+        i = slot_req[slot]
+        completed.append(CompletedRequest(
+            index=i, arrival=requests[i].arrival,
+            admitted_step=admitted_step[i], finished_step=step,
+            arrived_s=arrived_wall[i], finished_s=now_s,
+            tokens=np.asarray(emitted[i][:requests[i].gen], np.int32)))
+        slot_req[slot] = None
+        reserved[slot] = 0
+
+    to_release = []                                # slots freed, pages held
+
+    while queue or any(s is not None for s in slot_req):
+        now_s = time.perf_counter() - t0
+        for i in queue:
+            if requests[i].arrival <= step:
+                arrived_wall.setdefault(i, now_s)
+        # -- admission: arrived requests into free, page-backed slots ----
+        free_slots = [s for s in range(slots) if slot_req[s] is None]
+        budget = pool_pages - sum(reserved)
+        adm = []
+        for i in list(queue):
+            if not free_slots or requests[i].arrival > step:
+                break
+            need = pages_for(requests[i])
+            if need > budget:
+                break                              # head-of-line: keep order
+            slot = free_slots.pop(0)
+            queue.remove(i)
+            slot_req[slot] = i
+            reserved[slot] = need
+            budget -= need
+            admitted_step[i] = step
+            adm.append((slot, i))
+        if adm and to_release:
+            # deferred page hand-back: freed slots accumulate across
+            # segment boundaries and release in one dispatch right before
+            # the pages are actually needed (host `reserved` accounting
+            # keeps the budget exact in between)
+            mask = np.zeros((slots,), bool)
+            mask[to_release] = True
+            caches = _release_slots(caches, jnp.asarray(mask))
+            to_release = []
+        if adm:
+            rounds += 1
+            prompts = np.zeros((slots, prompt_pad), np.int32)
+            lengths = np.ones((slots,), np.int32)
+            slot_ids = np.full((slots,), -1, np.int32)
+            for row, (slot, i) in enumerate(adm):
+                p = np.asarray(requests[i].prompt, np.int32).reshape(-1)
+                prompts[row, :p.size] = p
+                lengths[row] = p.size
+                slot_ids[row] = slot
+            # ragged prefill fully overwrites the reused scratch caches
+            # (capacity == prompt_pad, pos reset by prefill_write)
+            logits, scratch = prefill(params, jnp.asarray(prompts), scratch,
+                                      None, jnp.asarray(lengths))
+            tok0, key = sample_token(logits, key, temp_arr, sample=sample)
+            lengths_d = jnp.asarray(lengths)
+            slot_ids_d = jnp.asarray(slot_ids)
+            caches = _adopt_prompts(caches, scratch, slot_ids_d, lengths_d)
+            tok0_np = np.asarray(tok0)
+            new_done = np.zeros((slots,), bool)
+            new_rem = np.zeros((slots,), np.int32)
+            for row, (slot, i) in enumerate(adm):
+                t0_tok = int(tok0_np[row, 0])
+                emitted[i].append(t0_tok)
+                new_rem[row] = requests[i].gen - 1
+                new_done[row] = (requests[i].gen <= 1
+                                 or (eos_id is not None and t0_tok == eos_id))
+            tok, pos, done, rem = _admit_state(
+                tok, pos, done, rem, slot_ids_d, tok0, lengths_d,
+                jnp.asarray(new_done), jnp.asarray(new_rem))
+            if audit is not None:
+                audit(caches, list(slot_req))
+        # freshly admitted gen-1/EOS requests finish without decoding
+        just_done = np.asarray(done)
+        fin = [s for s in range(slots)
+               if slot_req[s] is not None and just_done[s]]
+        if fin:
+            now_s = time.perf_counter() - t0
+            for s in fin:
+                finish(s, now_s)
+            to_release.extend(fin)
+            continue
+        if all(s is None for s in slot_req):
+            if not queue:
+                break
+            step += segment                        # idle: nothing admittable
+            continue
+
+        # -- fused decode segment ---------------------------------------
+        toks, caches, tok, pos, key, done, rem, _ = seg_fn(
+            params, tok, caches, pos, key, temp_arr, done, rem)
+        segments += 1
+        step += segment
+        # pool utilization from the host-side reservation ledger (exact
+        # upper bound on device-held pages; no extra device sync),
+        # sampled while the segment's occupants still hold their pages
+        page_util.append((step, sum(reserved) / max(pool_pages, 1)))
+        toks_np, done_np = jax.device_get((toks, done))    # one sync
+        now_s = time.perf_counter() - t0
+        for s in range(slots):
+            if slot_req[s] is None:
+                continue
+            i = slot_req[s]
+            want = requests[i].gen - len(emitted[i])
+            row = toks_np[s, :max(want, 0)].tolist()
+            if eos_id is not None and eos_id in row:
+                row = row[:row.index(eos_id) + 1]
+            emitted[i].extend(row)
+        fin = [s for s in range(slots)
+               if slot_req[s] is not None and done_np[s]]
+        for s in fin:
+            finish(s, now_s)
+        to_release.extend(fin)
+
+    wall = time.perf_counter() - t0
+    return ServeResult(completed=completed, wall_s=wall, steps=step,
+                       segments=segments, admission_rounds=rounds,
+                       page_util=page_util)

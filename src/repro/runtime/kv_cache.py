@@ -5,13 +5,15 @@ K/V projections are stored quantized (int8 + quantization scales), so the
 cache is 4x smaller than f32 and feeds the integer attention path
 directly — no dequantize pass, the int8 MXU consumes the cache bytes as
 stored (paper §III's weight-stationary philosophy applied to the KV
-stream). The ring-buffer semantics (slot ``t % C``, logical ``pos``,
-``valid_len``/``q_offset`` derivation) live on the typed state in
-``repro.attention.state``; this module adds the *engine*: per-head
-symmetric quantization of the KV stream and the prefill/decode attend
-steps, dispatched through the attention backend registry (layout
-capabilities select the fused Pallas kernels — the decode step consumes
-the ring buffers cache-natively, no per-step transpose or broadcast).
+stream). The ring/pool semantics (slot ``t % C``, logical ``pos``,
+``valid_len``/``q_offset`` derivation, page tables + free stack) live on
+the typed states in ``repro.attention.state``; this module adds the
+*engine*: per-head symmetric quantization of the KV stream and the
+prefill/decode attend steps, dispatched through the attention backend
+registry (layout capabilities select the fused Pallas kernels — the
+decode step consumes ring buffers cache-natively via ``bhsd_bsgd`` and
+paged pools via ``bhsd_paged`` page-table index maps, no per-step
+transpose, broadcast or gather copies).
 
 Per-head scales are finer than the per-tensor QAT grid; the model path
 (``repro.models.attention``) passes the QAT per-tensor scales instead, so
@@ -23,11 +25,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.attention import AttentionSpec, KVCacheState, QuantScales, dispatch
+from repro.attention import (AttentionSpec, KVCacheState, PagedKVState,
+                             QuantScales, dispatch)
 from repro.core.quant import INT8_MAX, INT8_MIN
 
-__all__ = ["KVCacheState", "init_cache", "quantize_per_head",
-           "quantize_with_scale", "prefill_attend", "decode_attend"]
+__all__ = ["KVCacheState", "PagedKVState", "init_cache", "init_paged_cache",
+           "quantize_per_head", "quantize_with_scale", "prefill_attend",
+           "decode_attend"]
 
 
 def quantize_per_head(x: jax.Array, head_axis: int = 2):
@@ -58,6 +62,18 @@ def init_cache(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
                              dtype=dtype, per_head_scales=per_head_scales)
 
 
+def init_paged_cache(batch: int, capacity: int, n_kv_heads: int,
+                     head_dim: int, dtype=jnp.int8,
+                     per_head_scales: bool = False, *, page_size: int = 128,
+                     num_pages: int | None = None) -> PagedKVState:
+    """Fresh paged KV pool (shared arena + per-sequence page tables).
+    ``num_pages`` undersized vs ``batch * ceil(capacity/page_size)``
+    oversubscribes the pool — pair with an admission scheduler."""
+    return PagedKVState.init(batch, capacity, n_kv_heads, head_dim,
+                             dtype=dtype, per_head_scales=per_head_scales,
+                             page_size=page_size, num_pages=num_pages)
+
+
 # ---------------------------------------------------------------------------
 # Kernel-level decode engine (one attention layer over one cache)
 # ---------------------------------------------------------------------------
@@ -85,6 +101,8 @@ def prefill_attend(cache: KVCacheState, q_q: jax.Array, k_new: jax.Array,
     v_q, v_scale = quantize_per_head(v_new)
     cache = cache.prefill_write(k_q, v_q, lengths=lengths) \
                  .with_scales(k_scale, v_scale)
+    # Paged or ring, the *prefill attention* streams the freshly projected
+    # (B, S, G, D) tensors cache-natively — only decode re-reads the pool.
     spec = AttentionSpec(mode="prefill", impl="ita", causal=causal,
                          window=window, layout="bhsd_bsgd",
                          scale_kind="per_head", out_dtype="int8",
@@ -116,13 +134,16 @@ def decode_attend(cache: KVCacheState, q_q: jax.Array, k_new: jax.Array,
     k_q = quantize_with_scale(k_new, cache.k_scale[None, None, :, None])
     v_q = quantize_with_scale(v_new, cache.v_scale[None, None, :, None])
     cache = cache.decode_append(k_q, v_q)
+    paged = isinstance(cache, PagedKVState)
     spec = AttentionSpec(mode="decode", impl="ita", causal=causal,
-                         window=window, layout="bhsd_bsgd",
+                         window=window,
+                         layout="bhsd_paged" if paged else "bhsd_bsgd",
                          scale_kind="per_head", out_dtype="int8",
                          q_len=q_q.shape[2])
     out = dispatch(q_q, cache.k, cache.v, spec=spec,
                    scales=QuantScales(s_q, cache.k_scale, cache.v_scale,
                                       s_out),
                    q_offset=cache.q_offset(1), kv_len=cache.valid_len(),
+                   page_table=cache.page_table if paged else None,
                    block_kv=block_kv, interpret=interpret)
     return out, cache

@@ -1,0 +1,368 @@
+"""Paged KV pool: ring-equivalence, allocator correctness, kernel parity.
+
+The acceptance property (ISSUE 4): the paged decode path — one shared
+``(num_pages, page_size, G, hd)`` arena consumed through page-table
+index maps — is **bit-identical** to the contiguous ring path on the
+``s_out`` output grid, across every backend that serves the paged spec
+(the ``ita_fused`` family invariant extended to the ``bhsd_paged``
+layout). On top of that, the allocator itself is property-checked: no
+physical page is ever double-booked, released pages return to the free
+stack, and realloc reuses them without leaking state.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import attention as ATT
+from repro.attention import KVCacheState, PagedKVState
+from repro.kernels.common import MIN_BLOCK_KV
+from repro.runtime import kv_cache as KV
+
+rng = np.random.default_rng(0)
+
+S_Q, S_OUT = np.float32(0.05), np.float32(0.02)
+
+
+def _i8(*shape):
+    return rng.integers(-128, 128, shape, dtype=np.int8)
+
+
+def _paged_from_logical(k_log, v_log, page, *, shuffle_seed=1):
+    """Scatter (B, C, G, hd) logical KV into a shuffled arena + table."""
+    b, c, g, hd = k_log.shape
+    npps = c // page
+    total = b * npps + 1
+    perm = np.random.default_rng(shuffle_seed).permutation(
+        np.arange(1, total))
+    pt = perm.reshape(b, npps).astype(np.int32)
+    k_pool = np.zeros((total, page, g, hd), np.int8)
+    v_pool = np.zeros((total, page, g, hd), np.int8)
+    for bb in range(b):
+        for j in range(npps):
+            k_pool[pt[bb, j]] = k_log[bb, j * page:(j + 1) * page]
+            v_pool[pt[bb, j]] = v_log[bb, j * page:(j + 1) * page]
+    return k_pool, v_pool, pt
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: paged ≡ ring, every eligible backend
+# ---------------------------------------------------------------------------
+
+PARITY_SPECS = [
+    # (hq, hkv, window, per_head) — causal, sliding-window, GQA and
+    # per-head-scale decode specs, as in the ring parity sweep
+    pytest.param(4, 4, 0, False, id="causal"),
+    pytest.param(4, 4, 80, True, id="sliding-window+per-head"),
+    pytest.param(4, 2, 0, True, id="gqa+per-head"),
+    pytest.param(4, 2, 80, False, id="gqa+window"),
+]
+
+
+@pytest.mark.parametrize("hq,hkv,window,per_head", PARITY_SPECS)
+def test_paged_parity_sweep_across_backends(hq, hkv, window, per_head):
+    """Every backend eligible for the paged decode spec is bit-identical
+    to the ring-buffer path at block_kv == page_size, mixed (ragged)
+    valid prefixes included."""
+    b, d, page, npps = 2, 32, 64, 3
+    cap = page * npps
+    q = _i8(b, hq, 1, d)
+    k_log = _i8(b, cap, hkv, d)
+    v_log = _i8(b, cap, hkv, d)
+    if per_head:
+        sk = jnp.asarray(rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32))
+        sv = jnp.asarray(rng.uniform(0.03, 0.07, (hkv,)).astype(np.float32))
+    else:
+        sk = sv = jnp.asarray(np.float32(0.04))
+    scales = ATT.QuantScales(S_Q, sk, sv, S_OUT)
+    kv_lens = jnp.asarray([150, cap])              # row 1 fully wrapped
+    offs = kv_lens - 1
+
+    ring_spec = ATT.AttentionSpec(
+        mode="decode", impl="ita", window=window, layout="bhsd_bsgd",
+        scale_kind="per_head" if per_head else "per_tensor",
+        out_dtype="int8", q_len=1)
+    ring = ATT.dispatch(jnp.asarray(q), jnp.asarray(k_log),
+                        jnp.asarray(v_log), spec=ring_spec, scales=scales,
+                        q_offset=offs, kv_len=kv_lens,
+                        backend="ita_decode_pallas", block_kv=page)
+
+    k_pool, v_pool, pt = _paged_from_logical(k_log, v_log, page)
+    spec = ring_spec.replace(layout="bhsd_paged")
+    eligible = ATT.list_backends(spec)
+    assert len(eligible) >= 2, eligible            # a sweep, not a singleton
+    assert {ATT.get_backend(n).family for n in eligible} == {"ita_fused"}
+    for name in eligible:
+        out = ATT.dispatch(jnp.asarray(q), jnp.asarray(k_pool),
+                           jnp.asarray(v_pool), spec=spec, scales=scales,
+                           q_offset=offs, kv_len=kv_lens,
+                           page_table=jnp.asarray(pt), backend=name)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ring),
+            err_msg=f"{name} (paged) != ring path for {spec}")
+
+
+def test_paged_layout_capability_matrix():
+    """bhsd_paged is served by exactly the fused decode/onepass kernels;
+    everything else declines with a reason, and dispatch enforces the
+    page_table handshake."""
+    spec = ATT.AttentionSpec(mode="decode", impl="ita", layout="bhsd_paged",
+                             out_dtype="int8", q_len=1)
+    assert ATT.list_backends(spec) == ["ita_decode_pallas",
+                                       "ita_onepass_pallas"]
+    for name, verdict in ATT.backend_reasons(spec).items():
+        if name not in ("ita_decode_pallas", "ita_onepass_pallas"):
+            assert isinstance(verdict, str) and verdict, name
+    q = jnp.asarray(_i8(1, 2, 1, 32))
+    pool = jnp.asarray(_i8(3, 64, 2, 32))
+    sc = ATT.QuantScales.per_tensor(S_Q, s_out=S_OUT)
+    with pytest.raises(ValueError, match="page_table"):
+        ATT.dispatch(q, pool, pool, spec=spec, scales=sc)
+    with pytest.raises(ValueError, match="page_table"):
+        ATT.dispatch(q, q, q, spec=spec.replace(layout="bhsd"), scales=sc,
+                     page_table=jnp.zeros((1, 1), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# State: logical ring equivalence + allocator properties
+# ---------------------------------------------------------------------------
+
+def _logical_view(p: PagedKVState):
+    pt = np.asarray(p.page_table)
+    g, hd = p.k.shape[2], p.k.shape[3]
+    return np.asarray(p.k)[pt].reshape(p.batch, p.capacity, g, hd)
+
+
+def test_paged_state_matches_ring_through_wrap():
+    """Ragged prefill + appends past the wrap: the pool's logical view
+    (pages gathered through the table) equals the ring byte-for-byte on
+    every valid slot, and pos/valid_len/q_offset agree."""
+    b, g, hd, page, cap = 3, 2, 4, 8, 32
+    toks = _i8(b, 40, g, hd)
+    lens = jnp.asarray([5, 12, 9], jnp.int32)
+    ring = KVCacheState.init(b, cap, g, hd).prefill_write(
+        jnp.asarray(toks[:, :12]), jnp.asarray(toks[:, :12]), lengths=lens)
+    paged = PagedKVState.init(b, cap, g, hd, page_size=page).prefill_write(
+        jnp.asarray(toks[:, :12]), jnp.asarray(toks[:, :12]), lengths=lens)
+    # lazy allocation: a 5-token row holds 1 page, not the full window
+    np.testing.assert_array_equal(np.asarray(paged.pages_held()), [1, 2, 2])
+
+    for t in range(12, 40):
+        ring = ring.decode_append(jnp.asarray(toks[:, t:t + 1]),
+                                  jnp.asarray(toks[:, t:t + 1]))
+        paged = paged.decode_append(jnp.asarray(toks[:, t:t + 1]),
+                                    jnp.asarray(toks[:, t:t + 1]))
+    np.testing.assert_array_equal(np.asarray(ring.pos),
+                                  np.asarray(paged.pos))
+    np.testing.assert_array_equal(np.asarray(ring.valid_len()),
+                                  np.asarray(paged.valid_len()))
+    np.testing.assert_array_equal(np.asarray(ring.q_offset(1)),
+                                  np.asarray(paged.q_offset(1)))
+    lv, rv = _logical_view(paged), np.asarray(ring.k)
+    for row in range(b):
+        n, pos = int(ring.valid_len()[row]), int(ring.pos[row])
+        for t in range(pos - n, pos):
+            np.testing.assert_array_equal(
+                lv[row, t % cap], rv[row, t % cap],
+                err_msg=f"row {row} token {t}")
+
+
+def _partition_ok(p: PagedKVState):
+    """Invariant: {parking} ∪ free stack ∪ held pages partition the
+    arena — no double-booking, no leaks."""
+    pt = np.asarray(p.page_table)
+    held_counts = np.asarray(p.pages_held())
+    held = []
+    for row in range(p.batch):
+        held.extend(pt[row, :held_counts[row]].tolist())
+    free = np.asarray(p.free_stack)[:int(p.free_top)].tolist()
+    if len(set(held)) != len(held):                # a page in two rows
+        return False
+    if set(held) & set(free):                      # held page marked free
+        return False
+    if 0 in held or 0 in free:                     # parking page leaked
+        return False
+    return set(held) | set(free) | {0} == set(range(p.num_pages))
+
+
+def test_page_free_and_realloc_reuse():
+    """Released pages return to the stack and are handed out again; the
+    re-admitted row's bytes are exactly the new prompt (no stale state
+    from the page's previous owner)."""
+    b, g, hd, page, cap = 2, 2, 4, 8, 16
+    p = PagedKVState.init(b, cap, g, hd, page_size=page)
+    total_free = int(p.free_top)
+    a = _i8(b, 12, g, hd)
+    p = p.prefill_write(jnp.asarray(a), jnp.asarray(a))
+    assert int(p.free_top) == total_free - 4
+    assert _partition_ok(p)
+
+    p = p.release(jnp.asarray([True, False]))
+    assert int(p.free_top) == total_free - 2
+    assert int(p.pos[0]) == 0 and int(p.pos[1]) == 12
+    assert _partition_ok(p)
+
+    # re-admit row 0 with a fresh prompt into the recycled pages
+    fresh = _i8(1, 9, g, hd)
+    p = p.write_prompts(jnp.asarray(fresh), jnp.asarray(fresh),
+                        lengths=jnp.asarray([9]),
+                        slots=jnp.asarray([0]))
+    assert int(p.pos[0]) == 9 and _partition_ok(p)
+    np.testing.assert_array_equal(_logical_view(p)[0, :9], fresh[0])
+    # row 1 untouched by the realloc
+    np.testing.assert_array_equal(_logical_view(p)[1, :12], a[1])
+
+
+def test_allocator_partition_property_seeded():
+    """Seeded property test: a random interleaving of admissions (into
+    released rows), appends (with random live masks) and releases never
+    double-books a page — the partition invariant holds at every step."""
+    b, g, hd, page, cap = 4, 1, 4, 4, 16
+    prng = np.random.default_rng(7)
+    p = PagedKVState.init(b, cap, g, hd, page_size=page,
+                          num_pages=b * (cap // page) + 1)
+    active = np.zeros(b, bool)
+    for op in range(120):
+        kind = prng.integers(0, 3)
+        if kind == 0:                              # admit into a free row
+            free = np.flatnonzero(~active)
+            if free.size:
+                row = int(prng.choice(free))
+                ln = int(prng.integers(1, cap + 1))
+                tok = _i8(1, ln, g, hd)
+                p = p.write_prompts(jnp.asarray(tok), jnp.asarray(tok),
+                                    lengths=jnp.asarray([ln]),
+                                    slots=jnp.asarray([row]))
+                active[row] = True
+        elif kind == 1 and active.any():           # masked decode append
+            live = active & (prng.random(b) < 0.8)
+            tok = _i8(b, 1, g, hd)
+            p = p.decode_append(jnp.asarray(tok), jnp.asarray(tok),
+                                live=jnp.asarray(live))
+        elif kind == 2 and active.any():           # release some rows
+            fin = active & (prng.random(b) < 0.4)
+            if fin.any():
+                p = p.release(jnp.asarray(fin))
+                active &= ~fin
+        assert not bool(p.oversubscribed()), f"op {op}: pool overdrawn"
+        assert _partition_ok(p), f"op {op}: partition violated"
+
+
+def test_burst_and_overlong_append_match_ring():
+    """Multi-token bursts (page-crossing, ring-wrapping, over-capacity)
+    keep the paged pool's logical bytes equal to the ring's."""
+    b, g, hd, page, cap = 1, 2, 4, 8, 16
+    toks = _i8(b, 41, g, hd)
+    ring = KVCacheState.init(b, cap, g, hd).prefill_write(
+        jnp.asarray(toks[:, :15]), jnp.asarray(toks[:, :15]))
+    paged = PagedKVState.init(b, cap, g, hd, page_size=page).prefill_write(
+        jnp.asarray(toks[:, :15]), jnp.asarray(toks[:, :15]))
+    for lo, hi in ((15, 19), (19, 21), (21, 41)):  # wraps; last > capacity
+        ring = ring.decode_append(jnp.asarray(toks[:, lo:hi]),
+                                  jnp.asarray(toks[:, lo:hi]))
+        paged = paged.decode_append(jnp.asarray(toks[:, lo:hi]),
+                                    jnp.asarray(toks[:, lo:hi]))
+        np.testing.assert_array_equal(np.asarray(ring.pos),
+                                      np.asarray(paged.pos))
+        lv, rv = _logical_view(paged), np.asarray(ring.k)
+        pos, n = int(ring.pos[0]), int(ring.valid_len()[0])
+        for t in range(pos - n, pos):
+            np.testing.assert_array_equal(lv[0, t % cap], rv[0, t % cap],
+                                          err_msg=f"token {t} after "
+                                                  f"burst [{lo},{hi})")
+
+
+def test_paged_state_is_pytree_and_jit_safe():
+    p = PagedKVState.init(2, 16, 2, 4, page_size=8, per_head_scales=True)
+    leaves = jax.tree.leaves(p)
+    assert len(leaves) == 8
+    shp = jax.eval_shape(lambda: PagedKVState.init(2, 16, 2, 4, page_size=8))
+    assert isinstance(shp, PagedKVState) and shp.k_scale is None
+
+    @jax.jit
+    def step(c, t):
+        return c.decode_append(t, t)
+
+    out = step(p, jnp.ones((2, 1, 2, 4), jnp.int8))
+    assert isinstance(out, PagedKVState)
+    np.testing.assert_array_equal(np.asarray(out.pos), [1, 1])
+    np.testing.assert_array_equal(np.asarray(out.pages_held()), [1, 1])
+
+
+# ---------------------------------------------------------------------------
+# Engine level: decode_attend over a paged cache
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_attend_matches_ring_engine():
+    """The float-in/int8-out engine path over a paged cache is
+    bit-identical to the ring cache engine at block_kv == page_size."""
+    b, hq, hkv, d, page, cap = 2, 4, 2, 32, 64, 128
+    s, prefill = cap, 96
+    qf = rng.normal(0, 1, (b, hq, s, d)).astype(np.float32)
+    kf = rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32)
+    vf = rng.normal(0, 1, (b, s, hkv, d)).astype(np.float32)
+    q8 = KV.quantize_with_scale(jnp.asarray(qf), S_Q)
+
+    ring = KV.init_cache(b, cap, hkv, d, per_head_scales=True)
+    paged = KV.init_paged_cache(b, cap, hkv, d, per_head_scales=True,
+                                page_size=page)
+    _, ring = KV.prefill_attend(ring, q8[:, :, :prefill],
+                                jnp.asarray(kf[:, :prefill]),
+                                jnp.asarray(vf[:, :prefill]), S_Q, S_OUT,
+                                block_q=32, block_kv=page)
+    _, paged = KV.prefill_attend(paged, q8[:, :, :prefill],
+                                 jnp.asarray(kf[:, :prefill]),
+                                 jnp.asarray(vf[:, :prefill]), S_Q, S_OUT,
+                                 block_q=32, block_kv=page)
+    for t in range(prefill, s):
+        o_r, ring = KV.decode_attend(ring, q8[:, :, t:t + 1],
+                                     jnp.asarray(kf[:, t:t + 1]),
+                                     jnp.asarray(vf[:, t:t + 1]),
+                                     S_Q, S_OUT, block_kv=page)
+        o_p, paged = KV.decode_attend(paged, q8[:, :, t:t + 1],
+                                      jnp.asarray(kf[:, t:t + 1]),
+                                      jnp.asarray(vf[:, t:t + 1]),
+                                      S_Q, S_OUT, block_kv=page)
+        np.testing.assert_array_equal(np.asarray(o_r), np.asarray(o_p),
+                                      err_msg=f"decode step t={t}")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: ring block-alignment kills the decode pad-copy
+# ---------------------------------------------------------------------------
+
+def test_ring_capacity_block_aligned_at_init():
+    assert KVCacheState.init(1, 144, 2, 4).capacity == MIN_BLOCK_KV * 2
+    assert KVCacheState.init(1, 128, 2, 4).capacity == 128
+    assert KVCacheState.init(1, 96, 2, 4).capacity == 96   # <= one block
+    p = PagedKVState.init(1, 144, 2, 4, page_size=64)
+    assert p.capacity == 192                               # page multiple
+
+
+def test_decode_pad_copy_statically_forbidden():
+    """A decode dispatch over a non-block-multiple ring above one block
+    raises instead of silently pad-copying the ring every step."""
+    b, h, d, cap = 1, 2, 32, 192
+    q = jnp.asarray(_i8(b, h, 1, d))
+    kv = jnp.asarray(_i8(b, h, cap, d))
+    spec = ATT.AttentionSpec(mode="decode", impl="ita", layout="bhsd",
+                             out_dtype="int8", q_len=1)
+    sc = ATT.QuantScales.per_tensor(S_Q, s_out=S_OUT)
+    with pytest.raises(ValueError, match="block_kv"):
+        ATT.dispatch(q, kv, kv, spec=spec, scales=sc, q_offset=cap - 1,
+                     kv_len=cap, backend="ita_decode_pallas", block_kv=80)
+    # block-multiple capacities dispatch fine (the init-aligned case)
+    out = ATT.dispatch(q, kv, kv, spec=spec, scales=sc, q_offset=cap - 1,
+                       kv_len=cap, backend="ita_decode_pallas", block_kv=64)
+    assert out.shape == (b, h, 1, d)
+
+
+def test_block_defaults_recorded():
+    from repro.kernels.common import BLOCK_DEFAULTS, default_blocks
+    for name in ("ita_onepass_pallas", "ita_twopass_pallas",
+                 "ita_decode_pallas"):
+        assert name in BLOCK_DEFAULTS
+        bq, bkv = default_blocks(name)
+        assert bkv in (64, 128, 256)
+    assert default_blocks("ita_decode_pallas")[0] is None  # no q tiling
