@@ -6,11 +6,11 @@ performance: VMEM working set per grid step and HBM bytes per output tile
 for the chosen BlockSpecs (what you reason about on the lowered IR).
 
 ``--sweep`` (or env ``ITA_BENCH_SWEEP=1``) runs a (block_q, block_kv)
-grid over the fused onepass/decode backends and reports wall time plus
-the structural VMEM/DMA columns per cell — the data behind the
-per-backend defaults recorded in ``repro.kernels.common.BLOCK_DEFAULTS``
-(the registry's dispatch defaults; override per call with
-``block_q=``/``block_kv=`` opts).
+grid over the fused onepass/decode backends **and** a (block_m, block_n,
+block_k) grid over ``int8_matmul``, reporting wall time plus the
+structural VMEM/DMA columns per cell — the data behind the per-backend
+defaults recorded in ``repro.kernels.common.BLOCK_DEFAULTS`` (the
+dispatch/ops defaults; override per call with ``block_*=`` arguments).
 """
 
 import os
@@ -81,6 +81,11 @@ def _attention_vmem(bq, bkv, d):
     return bq * d + 2 * bkv * d + bq * d * 4 + 2 * bq * 4 + bq * bkv * 4
 
 
+def _matmul_vmem(bm, bn, bk):
+    """VMEM working set (bytes) of one int8-matmul grid step."""
+    return bm * bk + bk * bn + bm * bn * 4
+
+
 def sweep_rows(seq=256, d=64, heads=2, iters=3):
     """(block_q, block_kv) grid over the fused backends.
 
@@ -133,6 +138,22 @@ def sweep_rows(seq=256, d=64, heads=2, iters=3):
             kv_len=seq, backend="ita_decode_pallas", block_kv=bkv))
         rows.append((f"kernels/sweep_decode/bkv{bkv}",
                      us, _attention_vmem(8, bkv, d)))
+
+    # int8 matmul (block_m, block_n, block_k) column of the same grid run
+    # — the sweep behind BLOCK_DEFAULTS["int8_matmul"]
+    from repro.kernels.int8_matmul.ops import int8_matmul
+    m, k_dim, n = 256, 256, 256
+    x = jnp.asarray(rng.integers(-128, 128, (m, k_dim), dtype=np.int8))
+    w = jnp.asarray(rng.integers(-128, 128, (k_dim, n), dtype=np.int8))
+    mult = np.float32(0.001)
+    for bm in (64, 128, 256):
+        for bn in (64, 128):
+            for bk in (64, 128, 256):
+                us = timed(lambda: int8_matmul(x, w, None, mult, block_m=bm,
+                                               block_n=bn, block_k=bk))
+                rows.append((f"kernels/sweep_int8_matmul/"
+                             f"bm{bm}_bn{bn}_bk{bk}",
+                             us, _matmul_vmem(bm, bn, bk)))
     return rows
 
 
@@ -143,9 +164,9 @@ def main():
         from repro.kernels.common import BLOCK_DEFAULTS
         for name, us, vmem in sweep_rows():
             print(f"{name},{us:.1f},{vmem}")
-        for backend, (bq, bkv) in BLOCK_DEFAULTS.items():
+        for backend, blocks in BLOCK_DEFAULTS.items():
             print(f"kernels/block_default/{backend},0,"
-                  f"bq={bq}_bkv={bkv}")
+                  + "_".join(str(x) for x in blocks))
 
 
 if __name__ == "__main__":

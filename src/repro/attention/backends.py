@@ -89,6 +89,9 @@ def _float_supports(spec: AttentionSpec):
             or (spec.impl == "ibert" and spec.mode == "train")):
         return ("float softmax serves impl='float' (plus the ibert QAT "
                 "train forward, which the paper trains against)")
+    if spec.ragged_q:
+        return "ragged q_len rides the fused one-pass kernels"
+
     if spec.layout != "bshd":
         return "model layout (B,S,H,hd) only"
     if spec.out_dtype != "float":
@@ -126,6 +129,8 @@ def _float_run(q, k, v, spec, scales, *, q_offset=0, kv_len=None, **opts):
 def _chunked_supports(spec: AttentionSpec):
     if spec.impl != "ita":
         return "streams the ITA integer/STE arithmetic only"
+    if spec.ragged_q:
+        return "ragged q_len rides the fused one-pass kernels"
     if spec.mode == "decode":
         return ("decode rides the fused/direct paths (the streaming "
                 "q-chunk loop assumes q_offset=0)")
@@ -168,6 +173,8 @@ def _chunked_run(q, k, v, spec, scales, *, q_offset=0, kv_len=None, **opts):
 def _direct_supports(spec: AttentionSpec):
     if spec.impl != "ita":
         return "one-shot ITA integer arithmetic only"
+    if spec.ragged_q:
+        return "ragged q_len rides the fused one-pass kernels"
     if spec.mode != "decode":
         return ("serve-side decode fallback only (train/prefill stream "
                 "through ita_chunked_xla)")
@@ -194,6 +201,8 @@ def _direct_run(q, k, v, spec, scales, *, q_offset=0, kv_len=None, **opts):
 def _ibert_supports(spec: AttentionSpec):
     if spec.impl != "ibert":
         return "serves the I-BERT polynomial softmax pipeline only"
+    if spec.ragged_q:
+        return "ragged q_len rides the fused one-pass kernels"
     if spec.mode == "train":
         return ("the ibert QAT train forward uses the float softmax "
                 "baseline (float_xla)")
@@ -248,6 +257,9 @@ def _twopass_supports(spec: AttentionSpec):
     ok = _fused_common_supports(spec)
     if ok is not True:
         return ok
+    if spec.ragged_q:
+        return ("the materialized A matrix assumes uniform query rows; "
+                "ragged q_len rides the onepass kernels")
     if spec.layout == "bhsd_paged":
         return ("materializes/re-streams a contiguous A matrix; the paged "
                 "KV pool serves the onepass/decode kernels")
@@ -263,6 +275,9 @@ def _decode_supports(spec: AttentionSpec):
         return ok
     if spec.mode != "decode":
         return "decode-shaped kernel (no q tiling; single query tile)"
+    if spec.ragged_q:
+        return ("mixed chunk-width rows need the q-tiled onepass kernel "
+                "(the single decode tile caps at 8 queries)")
     if spec.q_len is None or spec.q_len > 8:
         return ("single query tile of at most 8 tokens (declare q_len in "
                 "the spec); longer bursts ride onepass/direct")
@@ -272,6 +287,7 @@ def _decode_supports(spec: AttentionSpec):
 def _fused_run(kind, q, k, v, spec, scales, q_offset, kv_len, opts):
     scales.require("s_q", "s_k", "s_v", "s_out")
     page_table = opts.get("page_table")
+    q_lens = opts.get("q_lens")
     if spec.layout == "bshd":
         q8 = jnp.swapaxes(_quantize(q, scales.s_q, 2), 1, 2)
         k8 = _quantize(k, scales.s_k, 2)
@@ -292,7 +308,7 @@ def _fused_run(kind, q, k, v, spec, scales, q_offset, kv_len, opts):
     dbq, dbkv = default_blocks(f"ita_{kind}_pallas")
     out = fused_attention(
         q8, k8, v8, scales.s_q, scales.s_k, scales.s_v, scales.s_out,
-        q_offset=q_offset, kv_len=kv_len, causal=spec.causal,
+        q_offset=q_offset, kv_len=kv_len, q_lens=q_lens, causal=spec.causal,
         window=spec.window, kind=kind, adaptive=spec.softmax == "adaptive",
         block_q=opts.get("block_q", dbq or 128),
         block_kv=opts.get("block_kv", dbkv),

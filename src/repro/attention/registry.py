@@ -116,7 +116,8 @@ def _validate(q, k, v, spec: AttentionSpec, scales):
 
 def dispatch(q, k, v, *, spec: AttentionSpec, scales=None,
              q_offset: Any = 0, kv_len: Any = None,
-             page_table: Any = None, backend: str | None = None, **opts):
+             page_table: Any = None, q_lens: Any = None,
+             backend: str | None = None, **opts):
     """Run one attention computation through the registry.
 
     ``q``/``k``/``v``: rank-4 arrays in ``spec.layout``. Integer impls
@@ -125,9 +126,11 @@ def dispatch(q, k, v, *, spec: AttentionSpec, scales=None,
     ``q_offset``/``kv_len``: dynamic decode plumbing (logical position of
     query 0; valid KV prefix). ``page_table`` (B, n_pages) int32 —
     required by (and only by) the ``bhsd_paged`` layout, where ``k``/``v``
-    are a shared paged pool. ``backend``: explicit override by name —
-    still capability-checked, so an ineligible (spec, backend) pair
-    raises ``BackendUnsupported`` with the backend's stated reason.
+    are a shared paged pool. ``q_lens`` (B,) int32 — required by (and
+    only by) ``spec.ragged_q``: each row's count of valid query rows in
+    the mixed chunked-prefill/decode call. ``backend``: explicit override
+    by name — still capability-checked, so an ineligible (spec, backend)
+    pair raises ``BackendUnsupported`` with the backend's stated reason.
     ``opts``: tuning knobs forwarded to the backend (``block_q``,
     ``block_kv``, ``q_chunk``, ``kv_chunk``, ``interpret``,
     ``scan_unroll``); unknown knobs are ignored by backends that don't
@@ -158,8 +161,15 @@ def dispatch(q, k, v, *, spec: AttentionSpec, scales=None,
             "page_table= is required by exactly the 'bhsd_paged' layout "
             f"(layout={spec.layout!r}, page_table "
             f"{'missing' if page_table is None else 'given'})")
+    if spec.ragged_q != (q_lens is not None):
+        raise ValueError(
+            "q_lens= is required by exactly ragged_q specs "
+            f"(ragged_q={spec.ragged_q}, q_lens "
+            f"{'missing' if q_lens is None else 'given'})")
     _validate(q, k, v, spec, scales)
     if page_table is not None:
         opts["page_table"] = page_table
+    if q_lens is not None:
+        opts["q_lens"] = q_lens
     return b.run(q, k, v, spec, scales, q_offset=q_offset, kv_len=kv_len,
                  **opts)

@@ -48,6 +48,11 @@ class AttentionSpec:
     for the XLA paths only.
     ``n_heads`` / ``n_kv_heads``: optional GQA declaration — when set,
     ``dispatch`` validates tensor shapes against them.
+    ``ragged_q``: the caller passes a per-row ``q_lens`` vector and each
+    batch row treats only its first ``q_lens[b]`` query rows as real —
+    the mixed chunked-prefill/decode serve step, where one call carries
+    decode rows (1 query) next to prefill rows (``chunk`` queries). Only
+    the fused one-pass kernels serve it.
     """
 
     mode: str = "prefill"            # train | prefill | decode
@@ -64,6 +69,7 @@ class AttentionSpec:
     q_len: int | None = None
     n_heads: int | None = None
     n_kv_heads: int | None = None
+    ragged_q: bool = False
 
     def __post_init__(self):
         for field, value, allowed in (

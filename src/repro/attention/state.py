@@ -435,6 +435,40 @@ class PagedKVState:
         return dataclasses.replace(new, k=k_t, v=v_t,
                                    pos=self.pos + s_new * live_i)
 
+    def append_chunk(self, k_q: jax.Array, v_q: jax.Array,
+                     n_new: jax.Array) -> "PagedKVState":
+        """Append a *per-row ragged* chunk: row ``b`` writes its first
+        ``n_new[b]`` of the ``S`` presented tokens at logical slots
+        ``pos[b] .. pos[b] + n_new[b] - 1``, scattering across page
+        boundaries and popping fresh pages off the free stack *inside
+        jit* exactly like ``decode_append``. Columns beyond a row's count
+        (decode rows in a mixed chunked-prefill batch present 1 real
+        token; dead rows 0) scatter into the parking page and that row's
+        ``pos`` advances by its own ``n_new`` only — the write primitive
+        of the mixed serve step, where one dispatch carries decode rows
+        next to prefill chunks with no ring scratch or host bytes-copy."""
+        b, s = k_q.shape[:2]
+        ps, cs = self.page_size, self.capacity
+        if s > cs:
+            raise ValueError(
+                f"append_chunk width {s} exceeds the per-sequence window "
+                f"{cs}; split the chunk (serving sizes chunk <= capacity)")
+        n_new = jnp.clip(jnp.asarray(n_new, jnp.int32).reshape(b), 0, s)
+        held = self.pages_held()
+        want = jnp.minimum(_ceil_div(self.pos + n_new, ps),
+                           self.pages_per_seq)
+        new = self._alloc(want - held)
+
+        cols = jnp.arange(s, dtype=jnp.int32)[None, :]
+        toks = (self.pos[:, None] + cols) % cs             # (B, S)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        real = cols < n_new[:, None]
+        phys = jnp.where(real, new.page_table[bidx, toks // ps],
+                         PARKING_PAGE)
+        k_t = new.k.at[phys, toks % ps].set(k_q)
+        v_t = new.v.at[phys, toks % ps].set(v_q)
+        return dataclasses.replace(new, k=k_t, v=v_t, pos=self.pos + n_new)
+
 
 jax.tree_util.register_dataclass(
     PagedKVState,

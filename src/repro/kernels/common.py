@@ -13,17 +13,20 @@ from repro.core.quant import SOFTMAX_SHIFT
 NEG_SENTINEL = -256          # below any int8 value; int32-overflow safe
 MASK_K = 31                  # shift that zeroes a masked element's term
 
-# Per-backend (block_q, block_kv) defaults, chosen by the
+# Per-backend block-size defaults, chosen by the
 # ``benchmarks/bench_kernels.py --sweep`` grid (VMEM working set stays
 # within one core's budget at d<=128 while the kv tile amortizes the DA
 # bookkeeping; the decode kernel has no q tiling — block_q is None).
-# These replace the hardcoded 128/128 that used to live in
-# ``attention/backends.py``; dispatch ``block_q=``/``block_kv=`` opts
-# still override per call.
+# Attention backends record (block_q, block_kv); ``int8_matmul`` records
+# (block_m, block_n, block_k) — its sweep column of the same grid run.
+# These replace the hardcoded defaults that used to live in
+# ``attention/backends.py`` / ``int8_matmul/ops.py``; explicit
+# ``block_*=`` call arguments still override per call.
 BLOCK_DEFAULTS = {
     "ita_onepass_pallas": (128, 128),
     "ita_twopass_pallas": (128, 128),
     "ita_decode_pallas": (None, 128),
+    "int8_matmul": (256, 128, 128),
 }
 
 # Rings/pools allocated at a multiple of this never hit the `_pad_seq`
@@ -34,8 +37,18 @@ MIN_BLOCK_KV = 128
 
 
 def default_blocks(backend: str) -> tuple:
-    """(block_q, block_kv) defaults for a fused backend name."""
-    return BLOCK_DEFAULTS.get(backend, (128, 128))
+    """(block_q, block_kv) defaults for a fused *attention* backend name
+    (the matmul entry records three sizes — use ``default_matmul_blocks``)."""
+    blocks = BLOCK_DEFAULTS.get(backend, (128, 128))
+    assert len(blocks) == 2, \
+        f"{backend!r} records {len(blocks)} block sizes, not (bq, bkv); " \
+        f"use default_matmul_blocks() for the matmul kernel"
+    return blocks
+
+
+def default_matmul_blocks() -> tuple:
+    """(block_m, block_n, block_k) defaults for the int8 matmul kernel."""
+    return BLOCK_DEFAULTS["int8_matmul"]
 
 # Platforms with a compiled Pallas lowering; everything else (CPU CI
 # containers) runs the kernels in interpret mode.
@@ -62,7 +75,8 @@ def resolve_interpret(interpret: bool | None = None) -> bool:
 
 def tile_mask(q_tile: jax.Array, kv_tile: jax.Array, bq: int, bkv: int,
               causal: bool, window: int, kv_len: jax.Array | None,
-              q_offset: jax.Array | int = 0):
+              q_offset: jax.Array | int = 0,
+              q_len: jax.Array | int | None = None):
     """Validity mask (bq, bkv) for a (q_tile, kv_tile) grid cell, computed
     from indices so the EN pass never relies on sentinel logit values.
 
@@ -70,9 +84,13 @@ def tile_mask(q_tile: jax.Array, kv_tile: jax.Array, bq: int, bkv: int,
     key j is visible from query i iff ``i - window < j <= i``.
     ``q_offset`` shifts the queries' logical positions (decode: the new
     token lives at position ``kv_len - 1``, not 0).
+    ``q_len`` masks *query rows* beyond a row's valid count (ragged
+    q_len: a mixed chunked-prefill/decode batch where one kernel call
+    carries rows with different real query widths — pad rows come out
+    all-masked, sigma 0, output 0).
     """
-    qi = q_offset + q_tile * bq \
-        + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    qli = q_tile * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    qi = q_offset + qli
     kj = kv_tile * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
     valid = jnp.ones((bq, bkv), jnp.bool_)
     if causal or window > 0:
@@ -81,6 +99,8 @@ def tile_mask(q_tile: jax.Array, kv_tile: jax.Array, bq: int, bkv: int,
         valid &= (qi - kj) < window
     if kv_len is not None:
         valid &= kj < kv_len
+    if q_len is not None:
+        valid &= qli < q_len
     return valid
 
 

@@ -8,6 +8,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_matmul_blocks
 from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
 from repro.kernels.int8_matmul.ref import int8_matmul_ref
 
@@ -26,16 +27,23 @@ def _pad_to(x, mult, axis):
     static_argnames=("block_m", "block_n", "block_k", "schedule", "use_pallas",
                      "interpret"))
 def int8_matmul(x_q: jax.Array, w_q: jax.Array, bias: jax.Array | None = None,
-                mult: jax.Array | float = 1.0, *, block_m: int = 256,
-                block_n: int = 128, block_k: int = 128,
+                mult: jax.Array | float = 1.0, *, block_m: int | None = None,
+                block_n: int | None = None, block_k: int | None = None,
                 schedule: str = "tpu", use_pallas: bool = True,
                 interpret: bool = True) -> jax.Array:
     """Quantized linear: int8 x int8 -> int32 -> requant int8.
 
     ``x_q``: (..., K) int8; ``w_q``: (K, N) int8; ``bias``: (N,) int32 in
     accumulator units; ``mult``: per-channel (N,) or scalar f32 requant
-    multiplier. Leading dims are flattened for the kernel.
+    multiplier. Leading dims are flattened for the kernel. Block sizes
+    default to ``kernels.common.BLOCK_DEFAULTS["int8_matmul"]`` — the
+    grid the ``bench_kernels.py --sweep`` run records; explicit
+    ``block_*=`` arguments override per call.
     """
+    dm, dn, dk = default_matmul_blocks()
+    block_m = dm if block_m is None else block_m
+    block_n = dn if block_n is None else block_n
+    block_k = dk if block_k is None else block_k
     *lead, kdim = x_q.shape
     n = w_q.shape[1]
     if bias is None:

@@ -33,11 +33,14 @@ Integer semantics notes:
   are per-(batch·head) rows so per-head cache quantization scales flow
   straight into the kernel.
 
-Ragged batches: ``kv_len``/``q_offset`` are per-(batch·head) rows of the
-``meta`` operand — every kernel row masks (and, in decode, tile-skips)
-against *its own* valid prefix, so a batch of sequences at different
-positions decodes in one call with no padding to the longest. Scalars
-broadcast to all rows (the dense case).
+Ragged batches: ``kv_len``/``q_offset``/``q_len`` are per-(batch·head)
+rows of the ``meta`` operand — every kernel row masks (and tile-skips)
+against *its own* valid KV prefix, so a batch of sequences at different
+positions decodes in one call with no padding to the longest. ``q_len``
+extends the raggedness to the *query* axis: a row only treats its first
+``q_len`` query rows as real (the rest emit zeros), which is how one
+mixed serve call carries decode rows (q_len 1) next to chunked-prefill
+rows (q_len = chunk). Scalars broadcast to all rows (the dense case).
 
 Paged KV pool: the ``*_paged`` entry points consume one shared
 ``(num_pages, page_size, G, hd)`` int8 arena through a **page table**
@@ -79,6 +82,7 @@ def onepass_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
                    bq: int, bkv: int, kv_4d: bool = False):
     i, j = pl.program_id(1), pl.program_id(2)
     last_j = pl.num_programs(2) - 1
+    kv_len = meta_ref[0, 0]
 
     @pl.when(j == 0)
     def _init():
@@ -86,23 +90,30 @@ def onepass_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
         sigma_ref[...] = jnp.zeros_like(sigma_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # kv_4d: cache-native (1, bkv, 1, d) blocks sliced straight out of a
-    # (B, S, G, hd) buffer by the index map — no host-side transpose.
-    k_tile = k_ref[0, :, 0] if kv_4d else k_ref[0]
-    v_tile = v_ref[0, :, 0] if kv_4d else v_ref[0]
-    logits = _qk_logits(q_ref[0], k_tile, lmult_ref[0, 0])
-    valid = tile_mask(i, j, bq, bkv, causal, window, meta_ref[0, 0],
-                      meta_ref[0, 1])
-    u, delta = da_update(m_ref, sigma_ref, logits, valid)
-    # Correct the running A·V accumulator for the max update (exact in f32:
-    # multiplying by 2^-delta loses nothing, unlike the integer Σ shift).
-    corr = jnp.exp2(-delta.astype(jnp.float32))
-    # u in [0, 128] — packs into uint8 on the MXU (int32 here: interpret
-    # mode validates semantics; XLA emits the s8/u8 MXU path on TPU).
-    pv = jax.lax.dot_general(u, v_tile.astype(jnp.int32),
-                             (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.int32)
-    acc_ref[...] = acc_ref[...] * corr + pv.astype(jnp.float32)
+    # KV tiles wholly beyond this row's valid prefix are fully masked —
+    # DA/acc no-ops — so skip their MXU work: chunked-prefill rows stream
+    # only their occupied pages, not the whole pool.
+    @pl.when(j * bkv < kv_len)
+    def _tile():
+        # kv_4d: cache-native (1, bkv, 1, d) blocks sliced straight out of
+        # a (B, S, G, hd) buffer by the index map — no host-side transpose.
+        k_tile = k_ref[0, :, 0] if kv_4d else k_ref[0]
+        v_tile = v_ref[0, :, 0] if kv_4d else v_ref[0]
+        logits = _qk_logits(q_ref[0], k_tile, lmult_ref[0, 0])
+        valid = tile_mask(i, j, bq, bkv, causal, window, kv_len,
+                          meta_ref[0, 1], meta_ref[0, 2])
+        u, delta = da_update(m_ref, sigma_ref, logits, valid)
+        # Correct the running A·V accumulator for the max update (exact in
+        # f32: multiplying by 2^-delta loses nothing, unlike the integer Σ
+        # shift).
+        corr = jnp.exp2(-delta.astype(jnp.float32))
+        # u in [0, 128] — packs into uint8 on the MXU (int32 here:
+        # interpret mode validates semantics; XLA emits the s8/u8 MXU path
+        # on TPU).
+        pv = jax.lax.dot_general(u, v_tile.astype(jnp.int32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+        acc_ref[...] = acc_ref[...] * corr + pv.astype(jnp.float32)
 
     @pl.when(j == last_j)
     def _finalize():
@@ -132,7 +143,7 @@ def qk_da_kernel(q_ref, k_ref, lmult_ref, meta_ref, a_ref, max_o_ref,
 
     logits = _qk_logits(q_ref[0], k_ref[0], lmult_ref[0, 0])
     valid = tile_mask(i, j, bq, bkv, causal, window, meta_ref[0, 0],
-                      meta_ref[0, 1])
+                      meta_ref[0, 1], meta_ref[0, 2])
     da_update(m_ref, sigma_ref, logits, valid)
     a_ref[0] = logits.astype(jnp.int8)
 
@@ -155,7 +166,7 @@ def av_en_kernel(a_ref, inv_ref, er_ref, max_ref, v_ref, omult_ref,
     a = a_ref[0].astype(jnp.int32)
     row_max = max_ref[0][:, None]
     valid = tile_mask(i, j, bq, bkv, causal, window, meta_ref[0, 0],
-                      meta_ref[0, 1])
+                      meta_ref[0, 1], meta_ref[0, 2])
     k = jax.lax.shift_right_logical(row_max - a, SOFTMAX_SHIFT)
     k = jnp.where(valid, jnp.minimum(k, 31), MASK_K)
     p = jax.lax.shift_right_logical(inv_ref[0][:, None], k)   # EN: p ≤ 256
@@ -199,7 +210,7 @@ def decode_kernel(q_ref, k_ref, v_ref, lmult_ref, omult_ref, meta_ref,
         v_tile = v_ref[0, :, 0] if kv_4d else v_ref[0]
         logits = _qk_logits(q_ref[0], k_tile, lmult_ref[0, 0])
         valid = tile_mask(0, j, bq, bkv, causal, window, kv_len,
-                          meta_ref[0, 1])
+                          meta_ref[0, 1], meta_ref[0, 2])
         u, delta = da_update(m_ref, sigma_ref, logits, valid)
         corr = jnp.exp2(-delta.astype(jnp.float32))
         pv = jax.lax.dot_general(u, v_tile.astype(jnp.int32),
@@ -233,20 +244,27 @@ def _row_mults(logit_mult, out_mult, bh):
     return lm, om
 
 
-def _row_meta(kv_len, q_offset, bh):
-    """Per-row ``[kv_len, q_offset]`` meta (bh, 2) int32. Scalars (the
-    dense case) broadcast to every row; (bh,) vectors pass through — the
-    ragged path, one valid prefix per (batch·head) row."""
+def _row_meta(kv_len, q_offset, q_len, bh):
+    """Per-row ``[kv_len, q_offset, q_len]`` meta (bh, 3) int32. Scalars
+    (the dense case) broadcast to every row; (bh,) vectors pass through —
+    the ragged path, one valid KV prefix / query position / query count
+    per (batch·head) row. ``q_len`` is the row's count of *valid query
+    rows* (ragged q_len: a mixed chunked-prefill/decode call); pass the
+    static query width for the dense case."""
     kv = jnp.asarray(kv_len, jnp.int32).reshape(-1)
     off = jnp.asarray(q_offset, jnp.int32).reshape(-1)
+    qn = jnp.asarray(q_len, jnp.int32).reshape(-1)
     assert kv.shape[0] in (1, bh), (kv.shape, bh)
     assert off.shape[0] in (1, bh), (off.shape, bh)
+    assert qn.shape[0] in (1, bh), (qn.shape, bh)
     return jnp.stack([jnp.broadcast_to(kv, (bh,)),
-                      jnp.broadcast_to(off, (bh,))], axis=1)
+                      jnp.broadcast_to(off, (bh,)),
+                      jnp.broadcast_to(qn, (bh,))], axis=1)
 
 
 def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
-                          q_offset=0, causal: bool, window: int = 0,
+                          q_offset=0, q_len=None, causal: bool,
+                          window: int = 0,
                           adaptive: bool = True, block_q: int = 128,
                           block_kv: int = 128, kv_rep: int = 1,
                           hq: int | None = None, interpret: bool = True):
@@ -267,7 +285,7 @@ def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
     kern = functools.partial(onepass_kernel, causal=causal, window=window,
                              adaptive=adaptive, bq=bq, bkv=bkv, kv_4d=kv_4d)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = _row_meta(kv_len, q_offset, bh)
+    meta = _row_meta(kv_len, q_offset, sq if q_len is None else q_len, bh)
     if kv_4d:
         assert hq is not None and bh % hq == 0
         # q row r = batch * hq + head  ->  (batch, kv tile, kv head)
@@ -286,7 +304,7 @@ def ita_attention_onepass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             kv_spec,
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
+            pl.BlockSpec((1, 3), lambda b, i, j: (b, 0)),
         ],
         out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
@@ -311,7 +329,7 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
     assert sq % bq == 0 and skv % bkv == 0
     assert k_q.shape[0] * kv_rep == bh, (k_q.shape, kv_rep, bh)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = _row_meta(kv_len, q_offset, bh)
+    meta = _row_meta(kv_len, q_offset, sq, bh)
 
     k1 = functools.partial(qk_da_kernel, causal=causal, window=window,
                            bq=bq, bkv=bkv)
@@ -322,7 +340,7 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             _specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
             _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
+            pl.BlockSpec((1, 3), lambda b, i, j: (b, 0)),
         ],
         out_specs=[
             _specs_bh((1, bq, bkv), lambda b, i, j: (b, i, j)),
@@ -357,7 +375,7 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             _specs_bh((1, bq), lambda b, i, j: (b, i)),
             _specs_bh((1, bkv, d), lambda b, i, j: (b // kv_rep, j, 0)),
             pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, i, j: (b, 0)),
+            pl.BlockSpec((1, 3), lambda b, i, j: (b, 0)),
         ],
         out_specs=_specs_bh((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
@@ -368,7 +386,8 @@ def ita_attention_twopass(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
 
 
 def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
-                         q_offset=0, causal: bool = True, window: int = 0,
+                         q_offset=0, q_len=None, causal: bool = True,
+                         window: int = 0,
                          adaptive: bool = True, block_kv: int = 128,
                          kv_rep: int = 1, hq: int | None = None,
                          interpret: bool = True):
@@ -395,7 +414,7 @@ def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
     kern = functools.partial(decode_kernel, causal=causal, window=window,
                              adaptive=adaptive, bq=sq, bkv=bkv, kv_4d=kv_4d)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = _row_meta(kv_len, q_offset, bh)
+    meta = _row_meta(kv_len, q_offset, sq if q_len is None else q_len, bh)
     if kv_4d:
         assert hq is not None and bh % hq == 0
         # q row r = batch * hq + head  ->  (batch, kv tile, kv head)
@@ -414,7 +433,7 @@ def ita_attention_decode(q_q, k_q, v_q, logit_mult, out_mult, kv_len, *,
             kv_spec,
             pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 3), lambda b, j: (b, 0)),
         ],
         out_specs=_specs_bh((1, sq, d), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.int8),
@@ -440,7 +459,7 @@ def _swallow_pt(kern):
 
 
 def ita_attention_decode_paged(q_q, k_pool, v_pool, page_table, logit_mult,
-                               out_mult, kv_len, *, q_offset=0,
+                               out_mult, kv_len, *, q_offset=0, q_len=None,
                                causal: bool = True, window: int = 0,
                                adaptive: bool = True, kv_rep: int = 1,
                                hq: int = 1, interpret: bool = True):
@@ -466,7 +485,7 @@ def ita_attention_decode_paged(q_q, k_pool, v_pool, page_table, logit_mult,
     kern = functools.partial(decode_kernel, causal=causal, window=window,
                              adaptive=adaptive, bq=sq, bkv=page, kv_4d=True)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = _row_meta(kv_len, q_offset, bh)
+    meta = _row_meta(kv_len, q_offset, sq if q_len is None else q_len, bh)
     kv_spec = pl.BlockSpec(
         (1, page, 1, d),
         lambda r, j, pt: (pt[r // hq, j], 0, (r % hq) // kv_rep, 0))
@@ -479,7 +498,7 @@ def ita_attention_decode_paged(q_q, k_pool, v_pool, page_table, logit_mult,
             kv_spec,
             pl.BlockSpec((1, 1), lambda b, j, pt: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, j, pt: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, j, pt: (b, 0)),
+            pl.BlockSpec((1, 3), lambda b, j, pt: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, sq, d), lambda b, j, pt: (b, 0, 0)),
         scratch_shapes=[pltpu.VMEM((sq, 1), jnp.int32),
@@ -495,15 +514,18 @@ def ita_attention_decode_paged(q_q, k_pool, v_pool, page_table, logit_mult,
 
 
 def ita_attention_onepass_paged(q_q, k_pool, v_pool, page_table, logit_mult,
-                                out_mult, kv_len, *, q_offset=0,
+                                out_mult, kv_len, *, q_offset=0, q_len=None,
                                 causal: bool, window: int = 0,
                                 adaptive: bool = True, block_q: int = 128,
                                 kv_rep: int = 1, hq: int = 1,
                                 interpret: bool = True):
-    """Flash-style onepass over a paged KV pool (prefill-from-pool and
-    decode bursts longer than the decode kernel's single tile). Grid and
-    page translation as in ``ita_attention_decode_paged``, with the q
-    tiling axis of ``ita_attention_onepass`` restored."""
+    """Flash-style onepass over a paged KV pool (prefill-from-pool, decode
+    bursts longer than the decode kernel's single tile, and the mixed
+    chunked-prefill/decode serve step). Grid and page translation as in
+    ``ita_attention_decode_paged``, with the q tiling axis of
+    ``ita_attention_onepass`` restored. ``q_len`` (scalar or per-row)
+    marks each row's count of valid query rows — ragged q_len: one call
+    serves rows with q widths in {1, chunk} (pad rows emit zeros)."""
     bh, sq, d = q_q.shape
     page = k_pool.shape[1]
     n_pages = page_table.shape[1]
@@ -514,7 +536,7 @@ def ita_attention_onepass_paged(q_q, k_pool, v_pool, page_table, logit_mult,
     kern = functools.partial(onepass_kernel, causal=causal, window=window,
                              adaptive=adaptive, bq=bq, bkv=page, kv_4d=True)
     lmult, omult = _row_mults(logit_mult, out_mult, bh)
-    meta = _row_meta(kv_len, q_offset, bh)
+    meta = _row_meta(kv_len, q_offset, sq if q_len is None else q_len, bh)
     kv_spec = pl.BlockSpec(
         (1, page, 1, d),
         lambda r, i, j, pt: (pt[r // hq, j], 0, (r % hq) // kv_rep, 0))
@@ -527,7 +549,7 @@ def ita_attention_onepass_paged(q_q, k_pool, v_pool, page_table, logit_mult,
             kv_spec,
             pl.BlockSpec((1, 1), lambda b, i, j, pt: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, i, j, pt: (b, 0)),
-            pl.BlockSpec((1, 2), lambda b, i, j, pt: (b, 0)),
+            pl.BlockSpec((1, 3), lambda b, i, j, pt: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j, pt: (b, i, 0)),
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.int32),

@@ -90,7 +90,7 @@ def _per_row(x, b, h):
     "kv_native", "interpret"))
 def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
            causal, window, kind, adaptive, block_q, block_kv, kv_native,
-           interpret, page_table=None):
+           interpret, page_table=None, q_lens=None):
     b, hq, sq, d = q_q.shape
     if page_table is not None:                  # paged pool (P, page, G, hd)
         hkv = k_q.shape[2]
@@ -118,8 +118,9 @@ def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
         skv = page_table.shape[1] * k_q.shape[1]
         kv_len = _per_row(skv if kv_len is None else kv_len, b, hq)
         q_offset = _per_row(q_offset, b, hq)
-        common = dict(q_offset=q_offset, causal=causal, window=window,
-                      adaptive=adaptive, kv_rep=rep, hq=hq,
+        q_len = None if q_lens is None else _per_row(q_lens, b, hq)
+        common = dict(q_offset=q_offset, q_len=q_len, causal=causal,
+                      window=window, adaptive=adaptive, kv_rep=rep, hq=hq,
                       interpret=interpret)
         if kind == "decode":
             out = ita_attention_decode_paged(
@@ -144,18 +145,19 @@ def _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, *, q_offset, kv_len,
 
     kv_len = _per_row(skv if kv_len is None else kv_len, b, hq)
     q_offset = _per_row(q_offset, b, hq)
+    q_len = None if q_lens is None else _per_row(q_lens, b, hq)
     if kind == "decode":
         out = ita_attention_decode(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
-            causal=causal, window=window, adaptive=adaptive,
+            q_len=q_len, causal=causal, window=window, adaptive=adaptive,
             block_kv=bkv, kv_rep=rep,
             hq=hq if kv_native else None, interpret=interpret)
     elif kind == "onepass":
         out = ita_attention_onepass(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
-            causal=causal, window=window, adaptive=adaptive, block_q=bq,
-            block_kv=bkv, kv_rep=rep, hq=hq if kv_native else None,
-            interpret=interpret)
+            q_len=q_len, causal=causal, window=window, adaptive=adaptive,
+            block_q=bq, block_kv=bkv, kv_rep=rep,
+            hq=hq if kv_native else None, interpret=interpret)
     else:
         out, _ = ita_attention_twopass(
             qf, kf, vf, lmult, omult, kv_len, q_offset=q_offset,
@@ -168,6 +170,7 @@ def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
                     s_q, s_k, s_v, s_out, *,
                     q_offset: jax.Array | int = 0,
                     kv_len: jax.Array | int | None = None,
+                    q_lens: jax.Array | None = None,
                     causal: bool = True, window: int = 0,
                     kind: str = "onepass", adaptive: bool = True,
                     block_q: int = 128, block_kv: int = 128,
@@ -192,6 +195,10 @@ def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
     ``kv_len``: valid prefix of the KV cache (defaults to Skv).
     Both accept (B,) per-sequence vectors — the ragged batch path: each
     (batch·head) kernel row masks/tile-skips against its own prefix.
+    ``q_lens`` (B,) extends the raggedness to the query axis: row ``b``
+    treats only its first ``q_lens[b]`` of the ``Sq`` query rows as real
+    (the rest emit zeros) — one mixed call serves decode rows (1 query)
+    next to chunked-prefill rows (``chunk`` queries).
     Returns (B, Hq, Sq, D) int8 at scale ``s_out``.
     """
     assert kind in KINDS, kind
@@ -199,8 +206,10 @@ def fused_attention(q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
         "cache-native KV layout serves the onepass/decode kernels only"
     assert not (page_table is not None and kind == "twopass"), \
         "the paged pool serves the onepass/decode kernels only"
+    assert not (q_lens is not None and kind == "twopass"), \
+        "ragged q_len serves the onepass/decode kernels only"
     return _fused(q_q, k_q, v_q, s_q, s_k, s_v, s_out, q_offset=q_offset,
                   kv_len=kv_len, causal=causal, window=window, kind=kind,
                   adaptive=adaptive, block_q=block_q, block_kv=block_kv,
                   kv_native=kv_native, page_table=page_table,
-                  interpret=resolve_interpret(interpret))
+                  q_lens=q_lens, interpret=resolve_interpret(interpret))

@@ -85,6 +85,19 @@ def main():
                          "granularity) for --continuous")
     ap.add_argument("--page-size", type=int, default=128,
                     help="KV pool page size (tokens per page)")
+    ap.add_argument("--admission", default="chunked",
+                    choices=["chunked", "stall"],
+                    help="chunked = prompts prefill in chunks inside the "
+                         "fused segments, interleaved with decode (page-"
+                         "native writes, no stop-the-world); stall = "
+                         "PR-4 stop-the-world padded prefill + adopt "
+                         "(A/B reference)")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="prompt tokens prefilling per slot per step "
+                         "under --admission chunked")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token budget of the decode-maximal "
+                         "scheduler (default slots - 1 + chunk_size)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
@@ -119,18 +132,24 @@ def main():
                 max_len=args.prompt_len + args.gen,
                 page_size=args.page_size, temperature=args.temperature,
                 key=key if args.temperature > 0 else None,
-                eos_id=args.eos_id)
+                eos_id=args.eos_id, admission=args.admission,
+                chunk_size=args.chunk_size, token_budget=args.token_budget)
         util = max((u for _, u in res.page_util), default=0.0)
         print(f"[serve] arch={cfg.name} continuous slots={args.batch} "
-              f"segment={args.segment} page_size={args.page_size}")
+              f"segment={args.segment} page_size={args.page_size} "
+              f"admission={args.admission}"
+              + (f" chunk={args.chunk_size}"
+                 if args.admission == "chunked" else ""))
         print(f"[serve] {len(res.completed)}/{args.requests} requests, "
               f"{res.steps} steps / {res.segments} segments / "
               f"{res.admission_rounds} admission rounds")
         print(f"[serve] {res.total_tokens} tokens in {res.wall_s:.2f} s "
               f"-> sustained {res.tok_s:.1f} tok/s; latency p50 "
               f"{res.latency_quantile(0.5)*1e3:.0f} ms p95 "
-              f"{res.latency_quantile(0.95)*1e3:.0f} ms; peak page util "
-              f"{util:.0%}")
+              f"{res.latency_quantile(0.95)*1e3:.0f} ms; TTFT p50 "
+              f"{res.ttft_quantile(0.5)*1e3:.0f} ms p95 "
+              f"{res.ttft_quantile(0.95)*1e3:.0f} ms; prefill-stall "
+              f"{res.prefill_stall_frac:.0%}; peak page util {util:.0%}")
         return
 
     with mesh, use_hints(mesh):

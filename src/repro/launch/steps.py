@@ -4,6 +4,7 @@ no device allocation) used by the dry-run and launchers."""
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any
 
@@ -12,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.launch import sharding as SH
 from repro.models import forward, init_caches, init_model, loss_fn
+from repro.models.layers import unembed
 from repro.optim.optimizer import AdamWConfig, adamw_update, init_opt_state
 
 
@@ -200,52 +202,232 @@ def make_generate_loop(cfg, *, gen: int, sample: bool, eos_id: int | None,
 
 
 # ---------------------------------------------------------------------------
-# Continuous-batching decode segment
+# Continuous-batching serve segments (pure decode + mixed chunked prefill)
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class ServeSlotState:
+    """Per-slot device state of the continuous-batching serve loop.
+
+    One fixed-width pytree the fused segments carry and the (tiny)
+    admission dispatch updates — admission is *just* this state write
+    plus the host's page reservation: prompt token ids are enqueued here
+    and prefilled chunk-by-chunk inside the segments (``cursor`` <
+    ``plen`` marks the prefill phase), so there is no stop-the-world
+    prompt dispatch and no ring-scratch bytes-copy on the chunked path.
+    ``keys`` is a per-slot PRNG stream (``fold_in`` of the serve key by
+    request id), making sampled outputs independent of admission
+    interleaving."""
+
+    tok: Any                  # (B, 1) int32 — last sampled token
+    pos: Any                  # (B,) int32 — stream position (cache pos)
+    keys: Any                 # (B, 2) uint32 — per-slot PRNG streams
+    done: Any                 # (B,) bool — finished / empty slots
+    rem: Any                  # (B,) int32 — tokens left to emit
+    cursor: Any               # (B,) int32 — prompt tokens prefilled so far
+    plen: Any                 # (B,) int32 — prompt length
+    prompt_buf: Any           # (B, prompt_pad) int32 — queued prompt ids
+
+    @classmethod
+    def init(cls, slots: int, prompt_pad: int, key=None) -> "ServeSlotState":
+        key = jax.random.PRNGKey(0) if key is None else key
+        return cls(
+            tok=jnp.zeros((slots, 1), jnp.int32),
+            pos=jnp.zeros((slots,), jnp.int32),
+            keys=fold_keys(key, jnp.arange(slots, dtype=jnp.int32)),
+            done=jnp.ones((slots,), jnp.bool_),
+            rem=jnp.zeros((slots,), jnp.int32),
+            cursor=jnp.zeros((slots,), jnp.int32),
+            plen=jnp.zeros((slots,), jnp.int32),
+            prompt_buf=jnp.zeros((slots, max(prompt_pad, 1)), jnp.int32))
+
+
+jax.tree_util.register_dataclass(
+    ServeSlotState,
+    data_fields=("tok", "pos", "keys", "done", "rem", "cursor", "plen",
+                 "prompt_buf"),
+    meta_fields=())
+
+
+@jax.jit
+def fold_keys(key, ids):
+    """One PRNG stream per id: ``fold_in(key, ids[i])`` — request-id
+    derived streams make each served request's draws a function of its
+    own id, not of admission interleaving."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.asarray(ids, jnp.int32))
+
+
+def advance_step_rows(logits, keys, temperature, done, rem, n, active, *,
+                      sample: bool, eos_id: int | None, pad_id: int):
+    """Per-row serve-step tail shared by the pure-decode and mixed segment
+    bodies — the per-slot-PRNG analogue of ``advance_step``: sample each
+    ``active`` row from its own stream, pad everything else, count active
+    emissions into ``n``, charge them against ``rem`` and fold budget
+    exhaustion / EOS into ``done``. Both bodies calling this one function
+    keeps their emission bookkeeping structurally identical (the
+    chunked ≡ stall bit-parity guarantee), not merely test-caught.
+    Returns ``(tok (B, 1), keys, done, rem, n)``."""
+    nxt, keys = sample_token_rows(logits, keys, temperature, sample=sample,
+                                  advance=active)
+    nxt = jnp.where(active[:, None], nxt, pad_id)
+    n = n + jnp.sum(active).astype(jnp.int32)
+    rem = rem - active.astype(jnp.int32)
+    done = done | (active & (rem <= 0))
+    if eos_id is not None:
+        done = done | (active & (nxt[:, 0] == eos_id))
+    return nxt, keys, done, rem, n
+
+
+def sample_token_rows(logits, keys, temperature, *, sample: bool,
+                      advance=None):
+    """Per-row ``sample_token``: row ``b`` draws from its own stream
+    ``keys[b]`` with the exact solo-generate split schedule (``key, sub =
+    split(key)`` once per sampled token), so a request served through any
+    admission interleaving consumes the same stream as generating it
+    alone with ``fold_in``-derived keys. ``advance`` (B,) masks which
+    rows actually consume randomness this step (rows mid-prompt draw
+    nothing). Greedy (``sample=False``) is a plain argmax."""
+    if not sample:
+        return jnp.argmax(logits, -1).astype(jnp.int32), keys
+    pair = jax.vmap(jax.random.split)(keys)          # (B, 2, key)
+    subs = pair[:, 1]
+    tok = jax.vmap(
+        lambda s, lg: jax.random.categorical(s, lg / temperature, axis=-1)
+    )(subs, logits)
+    new_keys = pair[:, 0]
+    if advance is not None:
+        new_keys = jnp.where(advance[:, None], new_keys, keys)
+    return tok.astype(jnp.int32), new_keys
+
+
 def make_serve_segment(cfg, *, segment: int, sample: bool,
-                       eos_id: int | None, pad_id: int):
-    """One fused continuous-batching decode segment: a ``lax.scan`` of
-    ``segment`` steps over a fixed-slot batch, between two host admission
-    points.
+                       eos_id: int | None, pad_id: int,
+                       chunk: int | None = None, budget: int | None = None,
+                       mixed_steps: int | None = None):
+    """One fused continuous-batching segment: a ``lax.scan`` of
+    ``segment`` steps over a fixed-slot ``ServeSlotState``, between two
+    host admission points.
 
-    Differences from ``make_generate_loop``: the carry tracks a per-slot
-    ``done`` mask *given by the host* (slots the scheduler left empty
-    start done) and a per-slot remaining-budget vector ``rem`` (each
-    request decodes its own ``gen``); every step passes ``live = ~done``
-    into the decode forward so finished/empty slots neither write their
-    KV pages nor advance positions — which is what lets the host release
-    a finished slot's pages at the segment boundary and hand them to a
-    queued request without the scan ever touching freed memory.
+    ``chunk=None`` — pure decode: every live slot advances one token per
+    step through the paged decode kernel (``live = ~done`` masks
+    finished/empty slots out of cache writes and position advances, so
+    the host can release a finished slot's pages at the boundary without
+    the scan ever touching freed memory).
 
-    Returns ``seg(params, tok, caches, pos, key, temperature, done, rem,
-    frontend) -> (tokens (B, segment), caches, tok, pos, key, done, rem,
-    n_live)``; jit with ``donate_argnums=(2,)``.
+    ``chunk=N`` — **mixed** chunked-prefill + decode: each step, every
+    live slot processes either one decode token or one prompt chunk of up
+    to ``N`` tokens written *directly into pool pages*
+    (``PagedKVState.append_chunk`` + the ragged-q paged kernel — no ring
+    scratch, no separate prefill dispatch). The per-step token budget is
+    decode-maximal (Sarathi-style): every decoding slot gets its token
+    first, then prompt chunks fill the leftover ``budget - n_decode``
+    greedily in slot order — so decode throughput never stops for a
+    prompt, and with ``budget >= slots`` the head prefilling slot always
+    progresses. A slot whose chunk completes its prompt samples its first
+    token that same step (the logits of the prompt's last token), exactly
+    as a one-shot prefill would.
+
+    ``mixed_steps=k`` runs a **two-phase** segment in one dispatch: the
+    first ``k`` steps execute the mixed (chunk-wide) body, the remaining
+    ``segment - k`` the 1-token decode body — the scheduler sizes ``k``
+    to the prompt chunks actually outstanding, so segments stay long
+    (one host round-trip per ``segment`` steps) while chunk-wide q width
+    is paid only where prefill happens. ``None`` = all ``segment`` steps
+    mixed.
+
+    Returns ``seg(params, state, caches, temperature, frontend) ->
+    (tokens (B, segment), emitted (B, segment), grants (B, segment),
+    state, caches, n_live)`` — ``emitted`` masks which step-tokens are
+    real (a prefilling slot emits nothing until its prompt completes);
+    ``grants`` records per-slot granted token counts (the budget
+    invariant ``sum(grants[:, t]) <= budget`` is property-tested). Jit
+    with ``donate_argnums=(1, 2)``.
     """
     decode = make_decode_step(cfg)
+    if chunk is not None:
+        assert chunk >= 1, chunk
+        assert budget is not None and budget >= 1, budget
 
-    def seg(params, tok, caches, pos, key, temperature, done, rem,
-            frontend=None):
-        def body(carry, _):
-            caches, tok, pos, key, done, rem, n = carry
-            live = ~done
-            logits, caches = decode(params, tok, caches, pos, frontend,
-                                    live)
-            nxt, key = sample_token(logits, key, temperature, sample=sample)
-            nxt = jnp.where(done[:, None], pad_id, nxt)
-            n = n + jnp.sum(live).astype(jnp.int32)
-            rem = rem - live.astype(jnp.int32)
-            done = done | (rem <= 0)
-            if eos_id is not None:
-                done = done | (nxt[:, 0] == eos_id)
-            pos = pos + live.astype(jnp.int32)
-            return (caches, nxt, pos, key, done, rem, n), nxt[:, 0]
+    def decode_body(params, frontend, temperature, carry, _):
+        caches, st, n = carry
+        # slots still mid-prompt (a two-phase segment whose mixed steps
+        # underestimated budget contention) pause rather than decode
+        # from a token they never sampled
+        live = ~st.done & (st.cursor >= st.plen)
+        logits, caches = decode(params, st.tok, caches, st.pos, frontend,
+                                live)
+        nxt, keys, done, rem, n = advance_step_rows(
+            logits, st.keys, temperature, st.done, st.rem, n, live,
+            sample=sample, eos_id=eos_id, pad_id=pad_id)
+        pos = st.pos + live.astype(jnp.int32)
+        st = dataclasses.replace(
+            st, tok=jnp.where(live[:, None], nxt, st.tok), pos=pos,
+            keys=keys, done=done, rem=rem)
+        return (caches, st, n), (nxt[:, 0], live, live.astype(jnp.int32))
 
-        carry0 = (caches, tok, jnp.asarray(pos, jnp.int32), key, done, rem,
-                  jnp.zeros((), jnp.int32))
-        carry, toks = jax.lax.scan(body, carry0, None, length=segment)
-        caches, tok, pos, key, done, rem, n = carry
-        return toks.T, caches, tok, pos, key, done, rem, n
+    def mixed_body(params, frontend, temperature, carry, _):
+        caches, st, n = carry
+        live = ~st.done
+        prefilling = live & (st.cursor < st.plen)
+        decoding = live & (st.cursor >= st.plen)
+        # decode-maximal budget: decode slots first, prompt chunks fill
+        # the leftover greedily in slot order
+        want = jnp.where(prefilling,
+                         jnp.minimum(chunk, st.plen - st.cursor), 0)
+        cum = jnp.cumsum(want) - want                    # exclusive
+        left = budget - jnp.sum(decoding.astype(jnp.int32))
+        grant = jnp.clip(left - cum, 0, want)
+        n_new = grant + decoding.astype(jnp.int32)
+        # token block: prompt chunk at the cursor, or [tok, pad...]
+        cols = st.cursor[:, None] + jnp.arange(chunk, dtype=jnp.int32)
+        ptoks = jnp.take_along_axis(
+            st.prompt_buf, jnp.clip(cols, 0, st.prompt_buf.shape[1] - 1),
+            axis=1)
+        first = jnp.arange(chunk, dtype=jnp.int32)[None, :] == 0
+        tokens = jnp.where(prefilling[:, None], ptoks,
+                           jnp.where(first, st.tok, pad_id))
+        x, caches, _ = forward(params, tokens, cfg, mode="decode",
+                               frontend=frontend, caches=caches,
+                               pos0=st.pos, q_lens=n_new, skip_unembed=True)
+        # next-token logits sit at each row's last granted column; only
+        # that (B, 1, d) slice is unembedded — mid-prompt rows discard it
+        sel = jnp.take_along_axis(
+            x, jnp.maximum(n_new - 1, 0)[:, None, None], axis=1)
+        logits = unembed(params["embed"], sel, cfg.logit_softcap)
+        completes = prefilling & (st.cursor + n_new >= st.plen)
+        emits = decoding | completes
+        nxt, keys, done, rem, n = advance_step_rows(
+            logits, st.keys, temperature, st.done, st.rem, n, emits,
+            sample=sample, eos_id=eos_id, pad_id=pad_id)
+        st = dataclasses.replace(
+            st, tok=jnp.where(emits[:, None], nxt, st.tok),
+            pos=st.pos + n_new, keys=keys, done=done, rem=rem,
+            cursor=st.cursor + jnp.where(prefilling, n_new, 0))
+        return (caches, st, n), (nxt[:, 0], emits, n_new)
+
+    k = 0 if chunk is None else \
+        (segment if mixed_steps is None else min(mixed_steps, segment))
+
+    def seg(params, state, caches, temperature, frontend=None):
+        carry = (caches, state, jnp.zeros((), jnp.int32))
+        outs = []
+        if k > 0:
+            carry, out = jax.lax.scan(
+                functools.partial(mixed_body, params, frontend,
+                                  temperature), carry, None, length=k)
+            outs.append(out)
+        if k < segment:
+            carry, out = jax.lax.scan(
+                functools.partial(decode_body, params, frontend,
+                                  temperature), carry, None,
+                length=segment - k)
+            outs.append(out)
+        caches, state, n = carry
+        toks, emits, grants = (
+            jnp.concatenate(parts, axis=0) if len(outs) > 1 else parts[0]
+            for parts in zip(*outs))
+        return toks.T, emits.T, grants.T, state, caches, n
 
     return seg
 

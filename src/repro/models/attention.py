@@ -65,24 +65,28 @@ def _split_heads(x, n, hd):
 
 
 def make_spec(cfg, *, mode, causal, window, q_len=None,
-              has_s_out=True, layout="bshd") -> ATT.AttentionSpec:
+              has_s_out=True, layout="bshd",
+              ragged_q=False) -> ATT.AttentionSpec:
     """The layer's view of the engine: one spec per (cfg, call site).
     ``has_s_out=False`` declares a legacy param set without the output
     requant scale — the fused kernels then decline and the XLA paths
     serve (PR-1 fallback semantics, now a capability). ``layout``
     deviates from the model's ``bshd`` only for paged-pool decode
-    (``bhsd_paged``), where the KV operand is the shared arena."""
+    (``bhsd_paged``), where the KV operand is the shared arena.
+    ``ragged_q`` declares the mixed chunked-prefill/decode call (per-row
+    valid query counts ride the ``q_lens`` dispatch operand)."""
     return ATT.AttentionSpec(
         mode=mode, impl=cfg.attention_impl, causal=causal, window=window,
         softcap=cfg.attn_softcap, query_scale=cfg.query_scale,
         softmax="paper" if cfg.softmax_impl == "ita_paper" else "adaptive",
         layout=layout, scale_kind="per_tensor", out_dtype="float",
-        has_s_out=has_s_out, q_len=q_len, n_heads=cfg.n_heads)
+        has_s_out=has_s_out, q_len=q_len, n_heads=cfg.n_heads,
+        ragged_q=ragged_q)
 
 
 def apply_attention(params, x, *, cfg, kind="global", positions=None,
                     mem=None, cache=None, mode="train", lengths=None,
-                    live=None):
+                    live=None, q_lens=None):
     """Full attention layer: projections + RoPE + engine dispatch + output
     projection.
 
@@ -98,6 +102,11 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
     valid rows exact; pad rows are garbage the caller never reads).
     ``live`` (B,): decode-time slot mask — dead slots (continuous
     batching) skip the cache write and position advance.
+    ``q_lens`` (B,): the mixed chunked-prefill/decode step (paged caches
+    only) — row ``b`` carries ``q_lens[b]`` real tokens of the presented
+    width (decode rows 1, prefill rows a chunk, dead rows 0); K/V append
+    page-natively via ``append_chunk`` and attention runs the ragged-q
+    paged kernel, so prompt chunks never touch a ring scratch.
     """
     d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = x.dtype
@@ -141,11 +150,12 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
     quant_cache = cfg.attention_impl != "float"
 
     def run(qq, kk, vv, *, mode, causal=causal, window=window,
-            q_offset=0, kv_len=None, layout="bshd", page_table=None):
+            q_offset=0, kv_len=None, layout="bshd", page_table=None,
+            q_lens=None):
         q_len = qq.shape[2] if layout == "bhsd_paged" else qq.shape[1]
         spec = make_spec(cfg, mode=mode, causal=causal, window=window,
                          q_len=q_len, has_s_out=scales.s_out is not None,
-                         layout=layout)
+                         layout=layout, ragged_q=q_lens is not None)
         # cfg.attention_backend is a *preference*: it pins the backend at
         # every call site it can serve (no backend serves all of
         # train/prefill/decode), and capability dispatch covers the rest.
@@ -155,7 +165,7 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
             backend = None
         out = ATT.dispatch(qq, kk, vv, spec=spec, scales=scales,
                            q_offset=q_offset, kv_len=kv_len,
-                           page_table=page_table,
+                           page_table=page_table, q_lens=q_lens,
                            backend=backend, q_chunk=cfg.attn_q_chunk,
                            kv_chunk=cfg.attn_kv_chunk,
                            scan_unroll=cfg.scan_unroll)
@@ -178,6 +188,21 @@ def apply_attention(params, x, *, cfg, kind="global", positions=None,
         y = run(q, k, v, mode=mode)
         new_cache = cache.prefill_write(_q(k, "s_k"), _q(v, "s_v"),
                                         lengths=lengths)
+    elif q_lens is not None:                        # mixed chunk append
+        # Chunked-prefill serve step: per-row ragged widths, K/V written
+        # straight into pool pages (append_chunk), attention through the
+        # ragged-q paged kernel — no ring scratch, no host bytes-copy.
+        if not isinstance(cache, ATT.PagedKVState):
+            raise ValueError(
+                "q_lens= (mixed chunked prefill) requires paged KV caches; "
+                "ring caches serve uniform decode/prefill only")
+        n_new = jnp.asarray(q_lens, jnp.int32)
+        new_cache = cache.append_chunk(_q(k, "s_k"), _q(v, "s_v"), n_new)
+        y = run(jnp.swapaxes(q, 1, 2), new_cache.k, new_cache.v,
+                mode=mode, q_offset=new_cache.q_offset(n_new),
+                kv_len=new_cache.valid_len(), layout="bhsd_paged",
+                page_table=new_cache.page_table, q_lens=n_new)
+        y = jnp.swapaxes(y, 1, 2)
     else:                                           # decode append
         s_new = q.shape[1]
         new_cache = cache.decode_append(_q(k, "s_k"), _q(v, "s_v"),

@@ -122,7 +122,7 @@ def init_block_cache(cfg, kind: str, batch: int, max_len: int,
 
 
 def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode,
-                lengths=None, live=None):
+                lengths=None, live=None, q_lens=None):
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     cm = None if cache is None else cache.get("mix")
@@ -139,7 +139,7 @@ def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode,
         y, new_mix = A.apply_attention(p["attn"], h, cfg=cfg, kind=akind,
                                        positions=positions, mem=mem,
                                        cache=cm, mode=mode, lengths=lengths,
-                                       live=live)
+                                       live=live, q_lens=q_lens)
         if kind == "cross":
             y = y * jnp.tanh(p["gate_attn"]).astype(y.dtype)
         x = residual(y, "post_norm1")
@@ -161,7 +161,7 @@ def apply_block(p, x, kind, cfg, *, positions, mem, cache, mode,
         y, new_self = A.apply_attention(p["attn"], h, cfg=cfg, kind="global",
                                         positions=positions, cache=cm,
                                         mode=mode, lengths=lengths,
-                                        live=live)
+                                        live=live, q_lens=q_lens)
         x = x + y
         h = apply_norm(p["norm_x"], x, cfg.norm_type)
         y, new_cross = A.apply_attention(
@@ -227,7 +227,7 @@ def init_group_cache(cfg, pattern, n_periods, batch, max_len, paged=False,
 
 
 def apply_group(params, x, cfg, pattern, *, positions, mem, caches, mode,
-                lengths=None, live=None):
+                lengths=None, live=None, q_lens=None):
     """Scan the group over its periods. Returns (x, new_caches, aux_sum)."""
 
     def body(carry, xs):
@@ -240,7 +240,8 @@ def apply_group(params, x, cfg, pattern, *, positions, mem, caches, mode,
             xc, nc, a = apply_block(pparams[i], xc, kind, cfg,
                                     positions=positions, mem=mem,
                                     cache=blk_cache, mode=mode,
-                                    lengths=lengths, live=live)
+                                    lengths=lengths, live=live,
+                                    q_lens=q_lens)
             new_caches.append(nc)
             aux = aux + a
         ys = None if pcache is None else tuple(new_caches)
@@ -322,7 +323,8 @@ def _encode(params, cfg, frontend, mode):
 
 
 def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
-            pos0=None, lengths=None, live=None, skip_unembed=False):
+            pos0=None, lengths=None, live=None, q_lens=None,
+            skip_unembed=False):
     """tokens (B, S) int32. Returns (logits, new_caches, aux).
 
     ``pos0``: first token's position — a scalar (lockstep decode) or a
@@ -333,6 +335,10 @@ def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
     ``live`` (B,) bool marks which batch slots are real sequences during
     decode (continuous batching): dead slots neither write their caches
     nor advance positions, so released pages are never touched.
+    ``q_lens`` (B,) int32 marks a *mixed* decode step over paged caches
+    (chunked prefill): row ``b`` holds ``q_lens[b]`` real tokens of the
+    presented width — prompt chunks write pool pages directly and attend
+    through the ragged-q kernel alongside 1-token decode rows.
     """
     dt = cfg.compute_dtype()
     x = embed(params["embed"], tokens, dt)
@@ -366,7 +372,7 @@ def forward(params, tokens, cfg, *, mode="train", frontend=None, caches=None,
         x, nc, aux = apply_group(params["groups"][gi], x, cfg, pattern,
                                  positions=positions, mem=mem,
                                  caches=g_cache, mode=mode, lengths=lengths,
-                                 live=live)
+                                 live=live, q_lens=q_lens)
         aux_total = aux_total + aux
         if new_caches is not None:
             new_caches.append(nc)

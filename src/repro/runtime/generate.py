@@ -24,11 +24,14 @@ per token) as the parity/benchmark reference. ``paged=True`` swaps the
 per-sequence rings for shared paged KV pools (bit-identical tokens).
 
 ``serve_continuous`` is the continuous-batching server on top: a fixed-
-slot decode batch over the paged pool, fused ``lax.scan`` segments with
-host admission between them — finished sequences release their pages,
-arrived requests prefill into the freed slots, and throughput is
-sustained tok/s over the whole arrival trace (see DESIGN.md §Paged KV +
-continuous-batching dataflow).
+slot batch over the paged pool, fused ``lax.scan`` segments with host
+admission between them — finished sequences release their pages, and
+arrived prompts enter via **chunked prefill** (default): admission only
+enqueues token ids, the segments prefill them chunk-by-chunk straight
+into pool pages, interleaved with decode under a decode-maximal token
+budget. The stop-the-world PR-4 path survives as ``admission="stall"``.
+Throughput is sustained tok/s over the whole arrival trace (DESIGN.md
+§Paged KV + continuous-batching dataflow, §Chunked-prefill dataflow).
 """
 
 from __future__ import annotations
@@ -305,15 +308,21 @@ class ServeRequest:
 class CompletedRequest:
     index: int                       # position in the submitted trace
     arrival: int                     # virtual (step) arrival time
-    admitted_step: int               # step count when prefilled into a slot
+    admitted_step: int               # step count when admitted to a slot
     finished_step: int               # step count when the slot freed
     arrived_s: float                 # wall-clock when first admittable
     finished_s: float                # wall-clock at the freeing boundary
     tokens: Any                      # (gen,) int32 generated ids
+    first_token_s: float = 0.0       # wall-clock of the first emitted token
 
     @property
     def latency_s(self) -> float:
         return self.finished_s - self.arrived_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: queue wait + prompt processing."""
+        return self.first_token_s - self.arrived_s
 
 
 @dataclasses.dataclass
@@ -322,8 +331,10 @@ class ServeResult:
     wall_s: float                    # whole-trace wall clock
     steps: int                       # decode steps executed
     segments: int                    # fused segments dispatched
-    admission_rounds: int            # prefill dispatches
+    admission_rounds: int            # admission dispatches
     page_util: list                  # (step, fraction of pool pages held)
+    prefill_stall_s: float = 0.0     # wall spent in stop-the-world prefill
+                                     # dispatches (0 under chunked admission)
 
     @property
     def total_tokens(self) -> int:
@@ -333,19 +344,31 @@ class ServeResult:
     def tok_s(self) -> float:
         return self.total_tokens / max(self.wall_s, 1e-9)
 
-    def latency_quantile(self, q: float) -> float:
-        lats = sorted(c.latency_s for c in self.completed)
-        if not lats:
+    @property
+    def prefill_stall_frac(self) -> float:
+        return self.prefill_stall_s / max(self.wall_s, 1e-9)
+
+    def _quantile(self, values, q: float) -> float:
+        vals = sorted(values)
+        if not vals:
             return 0.0
-        return lats[min(int(q * len(lats)), len(lats) - 1)]
+        return vals[min(int(q * len(vals)), len(vals) - 1)]
+
+    def latency_quantile(self, q: float) -> float:
+        return self._quantile((c.latency_s for c in self.completed), q)
+
+    def ttft_quantile(self, q: float) -> float:
+        return self._quantile((c.ttft_s for c in self.completed), q)
 
 
 @functools.lru_cache(maxsize=32)
-def _serve_segment_fn(cfg, segment, sample, eos_id, pad_id):
+def _serve_segment_fn(cfg, segment, sample, eos_id, pad_id, chunk=None,
+                      budget=None, mixed_steps=None):
     from repro.launch.steps import make_serve_segment
     seg = make_serve_segment(cfg, segment=segment, sample=sample,
-                             eos_id=eos_id, pad_id=pad_id)
-    return jax.jit(seg, donate_argnums=(2,))
+                             eos_id=eos_id, pad_id=pad_id, chunk=chunk,
+                             budget=budget, mixed_steps=mixed_steps)
+    return jax.jit(seg, donate_argnums=(1, 2))
 
 
 def _is_kv_state(x):
@@ -367,18 +390,47 @@ def _release_slots(caches, finished):
     return jax.tree.map(rel, caches, is_leaf=_is_kv_state)
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
-def _admit_state(tok, pos, done, rem, slot_ids, tok0, lengths, new_done,
-                 new_rem):
-    """One dispatch for the per-slot scalar state of an admission round
-    (fixed-width: padding rows carry slot_id -1 and drop out)."""
-    valid = slot_ids >= 0
-    rows = jnp.where(valid, slot_ids, tok.shape[0])        # OOB -> drop
-    tok = tok.at[rows].set(tok0, mode="drop")
-    pos = pos.at[rows].set(lengths, mode="drop")
-    done = done.at[rows].set(new_done, mode="drop")
-    rem = rem.at[rows].set(new_rem, mode="drop")
-    return tok, pos, done, rem
+def _admit_rows(state, slot_ids):
+    """OOB-drop row indices for a fixed-width admission batch (padding
+    rows carry slot_id -1 and drop out of every scatter)."""
+    return jnp.where(slot_ids >= 0, slot_ids, state.done.shape[0])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys):
+    """Chunked admission is *only* this state write (plus the host's page
+    reservation): enqueue the prompt token ids and arm the slot's phase
+    state — the segments prefill chunk-by-chunk, page-native. No prompt
+    forward, no ring scratch, no bytes-copy."""
+    rows = _admit_rows(state, slot_ids)
+    return dataclasses.replace(
+        state,
+        prompt_buf=state.prompt_buf.at[rows].set(prompts, mode="drop"),
+        plen=state.plen.at[rows].set(lengths, mode="drop"),
+        cursor=state.cursor.at[rows].set(0, mode="drop"),
+        pos=state.pos.at[rows].set(0, mode="drop"),
+        tok=state.tok.at[rows].set(0, mode="drop"),
+        done=state.done.at[rows].set(False, mode="drop"),
+        rem=state.rem.at[rows].set(gens, mode="drop"),
+        keys=state.keys.at[rows].set(req_keys, mode="drop"))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
+                 req_keys):
+    """Stall-mode admission state write, after the stop-the-world prefill
+    sampled ``tok0``: the slot enters directly in the decode phase
+    (``cursor == plen``)."""
+    rows = _admit_rows(state, slot_ids)
+    return dataclasses.replace(
+        state,
+        tok=state.tok.at[rows].set(tok0, mode="drop"),
+        pos=state.pos.at[rows].set(lengths, mode="drop"),
+        plen=state.plen.at[rows].set(lengths, mode="drop"),
+        cursor=state.cursor.at[rows].set(lengths, mode="drop"),
+        done=state.done.at[rows].set(new_done, mode="drop"),
+        rem=state.rem.at[rows].set(new_rem, mode="drop"),
+        keys=state.keys.at[rows].set(req_keys, mode="drop"))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -401,7 +453,7 @@ def _adopt_prompts(pool, temp, slot_ids, lengths):
     return jax.tree.map(one, pool, temp, is_leaf=_is_kv_state)
 
 
-def _validate_serve_cfg(cfg):
+def _validate_serve_cfg(cfg, admission: str = "stall", chunk: int = 1):
     from repro import attention as ATT
     from repro.models.attention import make_spec
     kinds = {k for pat, _ in cfg.layer_groups for k in pat}
@@ -411,18 +463,33 @@ def _validate_serve_cfg(cfg):
             f"(got block kinds {sorted(kinds)})")
     if not cfg.causal:
         raise ValueError("continuous batching needs causal attention")
+    specs = [("paged decode", dict(q_len=1))]
+    if admission == "chunked":
+        # the mixed segment's ragged chunked-prefill call must be servable
+        specs.append(("ragged chunked-prefill paged decode",
+                      dict(q_len=chunk, ragged_q=True)))
     for kind in kinds:
         window = {"attn": 0, "local": cfg.local_window,
                   "swa": cfg.window}[kind]
-        spec = make_spec(cfg, mode="decode", causal=True, window=window,
-                         q_len=1, layout="bhsd_paged")
-        eligible = ATT.list_backends(spec)
-        if not eligible:
-            reasons = "; ".join(f"{n}: {r}" for n, r in
-                                ATT.backend_reasons(spec).items())
-            raise ValueError(
-                f"no attention backend serves the paged decode spec for "
-                f"{kind!r} blocks of {cfg.name!r} — {reasons}")
+        for what, kw in specs:
+            spec = make_spec(cfg, mode="decode", causal=True, window=window,
+                             layout="bhsd_paged", **kw)
+            if not ATT.list_backends(spec):
+                reasons = "; ".join(f"{n}: {r}" for n, r in
+                                    ATT.backend_reasons(spec).items())
+                raise ValueError(
+                    f"no attention backend serves the {what} spec for "
+                    f"{kind!r} blocks of {cfg.name!r} — {reasons}")
+
+
+ADMISSIONS = ("chunked", "stall")
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 def serve_continuous(params, cfg, requests, *, slots: int,
@@ -430,18 +497,36 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                      page_size: int = 128, num_pages: int | None = None,
                      temperature: float = 0.0, key=None,
                      eos_id: int | None = None, pad_id: int = 0,
+                     admission: str = "chunked", chunk_size: int = 32,
+                     token_budget: int | None = None,
                      audit=None) -> ServeResult:
     """Serve an arrival trace with continuous batching over a paged pool.
 
-    A fixed-slot decode batch (``slots`` wide) runs fused ``lax.scan``
-    segments of ``segment`` steps; between segments the host scheduler
-    (1) releases the pages of every finished sequence back to the shared
-    pool, (2) admits arrived requests into freed slots — one fixed-shape
-    ragged prefill for up to ``slots`` requests per round, adopted into
-    freshly allocated pages — and (3) reads back the segment's tokens.
-    Virtual time = decode steps (request ``arrival`` is in steps);
-    throughput is **sustained**: total generated tokens over the whole
-    trace wall clock, including prefills and admission gaps.
+    A fixed-slot batch (``slots`` wide) runs fused ``lax.scan`` segments
+    of ``segment`` steps; between segments the host scheduler (1)
+    releases the pages of every finished sequence back to the shared
+    pool, (2) admits arrived requests into freed slots, and (3) reads
+    back the segment's tokens. Virtual time = decode steps (request
+    ``arrival`` is in steps); throughput is **sustained**: total
+    generated tokens over the whole trace wall clock.
+
+    ``admission`` selects how prompts enter the batch:
+
+    - ``"chunked"`` (default) — admission only *enqueues* the prompt's
+      token ids into the slot's ``ServeSlotState`` (one tiny state
+      dispatch) and reserves pages; the prompt is then prefilled in
+      ``chunk_size``-token chunks *inside* the fused segments, written
+      page-native via ``append_chunk``, interleaved with decode steps
+      under a decode-maximal per-step ``token_budget`` (default
+      ``slots - 1 + chunk_size``: every decoding slot advances every
+      step, the leftover budget feeds prompt chunks). Decode throughput
+      never stops for a long prompt and the ring scratch + bytes-copy
+      adoption of the stall path never runs.
+    - ``"stall"`` — the PR-4 stop-the-world path, kept for A/B parity:
+      admission runs one fixed-shape ragged prefill over a ring scratch,
+      bytes-copies the K/V into pool pages (``_adopt_prompts``), and all
+      decode slots wait. Its stop time is reported as
+      ``ServeResult.prefill_stall_s``.
 
     Admission reserves each request's worst-case page need
     (``ceil((len + gen) / page_size)``, capped at the per-slot window) up
@@ -452,16 +537,24 @@ def serve_continuous(params, cfg, requests, *, slots: int,
 
     Requests decode greedily (or with temperature sampling when ``key``
     is given) until ``gen`` tokens or ``eos_id``. Greedy serving is
-    bit-identical to generating each request alone; sampled serving
-    shares one PRNG stream across slots, so a request's draws depend on
-    co-scheduled traffic (valid samples, not reproducible per request).
-    Returns ``ServeResult`` with per-request latencies and page-pool
+    bit-identical to generating each request alone under **both**
+    admission modes (chunked-prefill bit-exactness needs the solo prefill
+    on the same KV tile schedule: ``page_size`` equal to the fused
+    prefill ``block_kv``, 128, and a fused-kernel prefill backend).
+    Sampled serving draws each request's tokens from its own PRNG stream
+    (``fold_in(key, request_index)``), so outputs are independent of
+    admission interleaving and co-scheduled traffic.
+    Returns ``ServeResult`` with per-request latency/TTFT and page-pool
     utilization samples.
     """
-    from repro.launch.steps import sample_token
+    from repro.launch.steps import ServeSlotState, fold_keys, \
+        sample_token_rows
     from repro.models import init_caches
 
-    _validate_serve_cfg(cfg)
+    if admission not in ADMISSIONS:
+        raise ValueError(f"admission={admission!r} not in {ADMISSIONS}")
+    _validate_serve_cfg(cfg, admission=admission,
+                        chunk=max(1, chunk_size))
     requests = list(requests)
     if not requests:
         return ServeResult([], 0.0, 0, 0, 0, [])
@@ -470,21 +563,39 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     max_len = max_len or longest
     sample = temperature > 0.0 and key is not None
     temp_arr = jnp.asarray(temperature if sample else 1.0, jnp.float32)
-    key = jax.random.PRNGKey(0) if key is None else key
+    base_key = jax.random.PRNGKey(0) if key is None else key
 
     caches = init_caches(cfg, slots, max_len=max_len, paged=True,
                          page_size=page_size, num_pages=num_pages)
     geo = _first_paged(caches)
     pool_pages = geo.k.shape[1] - 1                # minus parking
     pages_per_seq = geo.page_table.shape[2]
+    capacity = pages_per_seq * page_size
+    chunk = max(1, min(chunk_size, capacity))
+    budget = token_budget if token_budget is not None \
+        else slots - 1 + chunk
+    if admission == "chunked" and budget < slots:
+        raise ValueError(
+            f"token_budget={budget} < slots={slots}: a decode-maximal "
+            f"step must cover every decoding slot plus at least one "
+            f"prefill token")
     prefill, _ = _steps(cfg)
-    seg_fn = _serve_segment_fn(cfg, segment, sample, eos_id, pad_id)
+    seg_decode = _serve_segment_fn(cfg, segment, sample, eos_id, pad_id)
+
+    def seg_mixed(n_steps):
+        # two-phase segment: chunk-wide mixed steps sized to the prompt
+        # chunks actually outstanding (rounded up to a power of two to
+        # bound compilation count), then 1-token decode steps for the
+        # rest — one dispatch, one host round-trip per `segment` steps,
+        # chunk-wide q width paid only where prefill happens
+        return _serve_segment_fn(
+            cfg, segment, sample, eos_id, pad_id, chunk, budget,
+            min(segment, _next_pow2(n_steps)))
 
     def pages_for(req):
         n = int(np.asarray(req.prompt).size) + req.gen
         return min(-(-n // page_size), pages_per_seq)
 
-    capacity = pages_per_seq * page_size
     for idx, r in enumerate(requests):
         plen = int(np.asarray(r.prompt).size)
         if plen > capacity:
@@ -496,30 +607,32 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                 f"request {idx} needs {pages_for(r)} pages but the pool "
                 f"has {pool_pages}; raise num_pages")
 
-    # reusable ring scratch for admission prefills (fully overwritten by
-    # every ragged prefill — allocated once, not per round)
-    scratch = init_caches(cfg, slots, max_len=prompt_pad)
+    # stall mode: reusable ring scratch for admission prefills (fully
+    # overwritten by every ragged prefill — allocated once, not per round)
+    scratch = init_caches(cfg, slots, max_len=prompt_pad) \
+        if admission == "stall" else None
 
     # scheduler state (host)
     order = sorted(range(len(requests)), key=lambda i: requests[i].arrival)
     queue = list(order)
     slot_req = [None] * slots                      # request index per slot
     reserved = [0] * slots                         # pages reserved per slot
+    plen_host = [0] * slots                        # prompt length per slot
+    cursor_host = [0] * slots                      # host mirror of cursor
+    prefilling = [False] * slots                   # host mirror of phase
     arrived_wall = {}
+    first_tok = {}
     emitted = {i: [] for i in range(len(requests))}
     admitted_step = {}
     completed = []
     page_util = []
 
-    # device-side slot state
-    tok = jnp.zeros((slots, 1), jnp.int32)
-    pos = jnp.zeros((slots,), jnp.int32)
-    done = jnp.ones((slots,), jnp.bool_)           # empty slots are dead
-    rem = jnp.zeros((slots,), jnp.int32)
+    state = ServeSlotState.init(slots, prompt_pad, base_key)
 
     step = 0
     segments = 0
     rounds = 0
+    stall_s = 0.0
     t0 = time.perf_counter()
 
     def finish(slot, now_s):
@@ -528,9 +641,11 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             index=i, arrival=requests[i].arrival,
             admitted_step=admitted_step[i], finished_step=step,
             arrived_s=arrived_wall[i], finished_s=now_s,
+            first_token_s=first_tok.get(i, now_s),
             tokens=np.asarray(emitted[i][:requests[i].gen], np.int32)))
         slot_req[slot] = None
         reserved[slot] = 0
+        prefilling[slot] = False
 
     to_release = []                                # slots freed, pages held
 
@@ -541,19 +656,19 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                 arrived_wall.setdefault(i, now_s)
         # -- admission: arrived requests into free, page-backed slots ----
         free_slots = [s for s in range(slots) if slot_req[s] is None]
-        budget = pool_pages - sum(reserved)
+        page_budget = pool_pages - sum(reserved)
         adm = []
         for i in list(queue):
             if not free_slots or requests[i].arrival > step:
                 break
             need = pages_for(requests[i])
-            if need > budget:
+            if need > page_budget:
                 break                              # head-of-line: keep order
             slot = free_slots.pop(0)
             queue.remove(i)
             slot_req[slot] = i
             reserved[slot] = need
-            budget -= need
+            page_budget -= need
             admitted_step[i] = step
             adm.append((slot, i))
         if adm and to_release:
@@ -569,70 +684,114 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             rounds += 1
             prompts = np.zeros((slots, prompt_pad), np.int32)
             lengths = np.ones((slots,), np.int32)
+            gens = np.zeros((slots,), np.int32)
             slot_ids = np.full((slots,), -1, np.int32)
+            rids = np.zeros((slots,), np.int32)
             for row, (slot, i) in enumerate(adm):
                 p = np.asarray(requests[i].prompt, np.int32).reshape(-1)
                 prompts[row, :p.size] = p
                 lengths[row] = p.size
+                gens[row] = requests[i].gen
                 slot_ids[row] = slot
-            # ragged prefill fully overwrites the reused scratch caches
-            # (capacity == prompt_pad, pos reset by prefill_write)
-            logits, scratch = prefill(params, jnp.asarray(prompts), scratch,
-                                      None, jnp.asarray(lengths))
-            tok0, key = sample_token(logits, key, temp_arr, sample=sample)
+                rids[row] = i
+                plen_host[slot] = p.size
+            req_keys = fold_keys(base_key, jnp.asarray(rids))
             lengths_d = jnp.asarray(lengths)
             slot_ids_d = jnp.asarray(slot_ids)
-            caches = _adopt_prompts(caches, scratch, slot_ids_d, lengths_d)
-            tok0_np = np.asarray(tok0)
-            new_done = np.zeros((slots,), bool)
-            new_rem = np.zeros((slots,), np.int32)
-            for row, (slot, i) in enumerate(adm):
-                t0_tok = int(tok0_np[row, 0])
-                emitted[i].append(t0_tok)
-                new_rem[row] = requests[i].gen - 1
-                new_done[row] = (requests[i].gen <= 1
-                                 or (eos_id is not None and t0_tok == eos_id))
-            tok, pos, done, rem = _admit_state(
-                tok, pos, done, rem, slot_ids_d, tok0, lengths_d,
-                jnp.asarray(new_done), jnp.asarray(new_rem))
+            if admission == "chunked":
+                # enqueue-only admission: prompt ids + phase state; the
+                # segments do the prefill, page-native
+                state = _admit_chunked(state, slot_ids_d,
+                                       jnp.asarray(prompts), lengths_d,
+                                       jnp.asarray(gens), req_keys)
+                for slot, i in adm:
+                    prefilling[slot] = True
+                    cursor_host[slot] = 0
+            else:
+                # stall admission: stop-the-world ragged prefill over the
+                # ring scratch, bytes-copied into pool pages
+                t_stall = time.perf_counter()
+                logits, scratch = prefill(params, jnp.asarray(prompts),
+                                          scratch, None, lengths_d)
+                tok0, req_keys = sample_token_rows(
+                    logits, req_keys, temp_arr, sample=sample)
+                caches = _adopt_prompts(caches, scratch, slot_ids_d,
+                                        lengths_d)
+                tok0_np = np.asarray(tok0)
+                new_done = np.zeros((slots,), bool)
+                new_rem = np.zeros((slots,), np.int32)
+                now_s = time.perf_counter() - t0
+                for row, (slot, i) in enumerate(adm):
+                    t0_tok = int(tok0_np[row, 0])
+                    emitted[i].append(t0_tok)
+                    first_tok.setdefault(i, now_s)
+                    new_rem[row] = requests[i].gen - 1
+                    new_done[row] = (requests[i].gen <= 1
+                                     or (eos_id is not None
+                                         and t0_tok == eos_id))
+                state = _admit_stall(
+                    state, slot_ids_d, lengths_d, tok0,
+                    jnp.asarray(new_done), jnp.asarray(new_rem), req_keys)
+                jax.block_until_ready(state.tok)
+                stall_s += time.perf_counter() - t_stall
             if audit is not None:
                 audit(caches, list(slot_req))
-        # freshly admitted gen-1/EOS requests finish without decoding
-        just_done = np.asarray(done)
-        fin = [s for s in range(slots)
-               if slot_req[s] is not None and just_done[s]]
-        if fin:
-            now_s = time.perf_counter() - t0
-            for s in fin:
-                finish(s, now_s)
-            to_release.extend(fin)
-            continue
+        if admission == "stall" and adm:
+            # freshly admitted gen-1/EOS requests finish without decoding
+            just_done = np.asarray(state.done)
+            fin = [s for s in range(slots)
+                   if slot_req[s] is not None and just_done[s]]
+            if fin:
+                now_s = time.perf_counter() - t0
+                for s in fin:
+                    finish(s, now_s)
+                to_release.extend(fin)
+                continue
         if all(s is None for s in slot_req):
             if not queue:
                 break
             step += segment                        # idle: nothing admittable
             continue
 
-        # -- fused decode segment ---------------------------------------
-        toks, caches, tok, pos, key, done, rem, _ = seg_fn(
-            params, tok, caches, pos, key, temp_arr, done, rem)
+        # -- fused segment: mixed while any slot is mid-prompt (sized to
+        # the chunks actually left), pure decode otherwise — decode-only
+        # phases never pay chunk-wide q width
+        if admission == "chunked" and any(prefilling):
+            # steps of mixed phase: bounded below by the largest single
+            # prompt (one chunk per slot per step) and by total prefill
+            # work over the per-step prefill token capacity (budget minus
+            # the decoding slots it must keep fed)
+            left = [plen_host[s] - cursor_host[s]
+                    for s in range(slots) if prefilling[s]]
+            n_dec = sum(1 for s in range(slots)
+                        if slot_req[s] is not None and not prefilling[s])
+            per_step = max(budget - n_dec, 1)
+            need = max(-(-max(left) // chunk),
+                       -(-sum(left) // per_step))
+            fn = seg_mixed(max(need, 1))
+        else:
+            fn = seg_decode
+        toks, emits, _, state, caches, _ = fn(params, state, caches,
+                                              temp_arr)
         segments += 1
         step += segment
         # pool utilization from the host-side reservation ledger (exact
         # upper bound on device-held pages; no extra device sync),
         # sampled while the segment's occupants still hold their pages
         page_util.append((step, sum(reserved) / max(pool_pages, 1)))
-        toks_np, done_np = jax.device_get((toks, done))    # one sync
+        toks_np, emits_np, done_np, cursor_np = jax.device_get(
+            (toks, emits, state.done, state.cursor))       # one sync
         now_s = time.perf_counter() - t0
         for s in range(slots):
             if slot_req[s] is None:
                 continue
             i = slot_req[s]
-            want = requests[i].gen - len(emitted[i])
-            row = toks_np[s, :max(want, 0)].tolist()
-            if eos_id is not None and eos_id in row:
-                row = row[:row.index(eos_id) + 1]
-            emitted[i].extend(row)
+            row = toks_np[s][emits_np[s]].tolist()
+            if row:
+                first_tok.setdefault(i, now_s)
+                emitted[i].extend(row)
+            cursor_host[s] = int(cursor_np[s])
+            prefilling[s] = cursor_host[s] < plen_host[s]
         fin = [s for s in range(slots)
                if slot_req[s] is not None and done_np[s]]
         for s in fin:
@@ -642,4 +801,4 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     wall = time.perf_counter() - t0
     return ServeResult(completed=completed, wall_s=wall, steps=step,
                        segments=segments, admission_rounds=rounds,
-                       page_util=page_util)
+                       page_util=page_util, prefill_stall_s=stall_s)

@@ -359,10 +359,137 @@ def test_decode_pad_copy_statically_forbidden():
 
 
 def test_block_defaults_recorded():
-    from repro.kernels.common import BLOCK_DEFAULTS, default_blocks
+    from repro.kernels.common import (BLOCK_DEFAULTS, default_blocks,
+                                      default_matmul_blocks)
     for name in ("ita_onepass_pallas", "ita_twopass_pallas",
                  "ita_decode_pallas"):
         assert name in BLOCK_DEFAULTS
         bq, bkv = default_blocks(name)
         assert bkv in (64, 128, 256)
     assert default_blocks("ita_decode_pallas")[0] is None  # no q tiling
+    # the matmul entry is 3-wide and fenced off from default_blocks()
+    assert len(default_matmul_blocks()) == 3
+    with pytest.raises(AssertionError, match="default_matmul_blocks"):
+        default_blocks("int8_matmul")
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: append_chunk + ragged q_len mixed calls (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def test_append_chunk_equals_sequential_appends():
+    """A ragged ``append_chunk`` (per-row n_new, one dispatch) is
+    state-identical to applying the same tokens as single-token
+    ``decode_append`` steps with live masks: same bytes, same pos, same
+    pages held, allocator partition intact — including rows whose chunk
+    crosses a page boundary and dead rows (n_new = 0)."""
+    b, g, hd, page, cap = 3, 2, 4, 8, 32
+    base = PagedKVState.init(b, cap, g, hd, page_size=page)
+    pre = _i8(b, 6, g, hd)
+    base = base.prefill_write(jnp.asarray(pre), jnp.asarray(pre),
+                              lengths=jnp.asarray([6, 3, 0]))
+    s = 12
+    toks = _i8(b, s, g, hd)
+    n_new = np.asarray([1, 12, 0], np.int32)       # decode / chunk / dead
+
+    chunked = base.append_chunk(jnp.asarray(toks), jnp.asarray(toks),
+                                jnp.asarray(n_new))
+    ref = base
+    for t in range(s):
+        live = jnp.asarray(t < n_new)
+        ref = ref.decode_append(jnp.asarray(toks[:, t:t + 1]),
+                                jnp.asarray(toks[:, t:t + 1]), live=live)
+    np.testing.assert_array_equal(np.asarray(chunked.pos),
+                                  np.asarray(ref.pos))
+    np.testing.assert_array_equal(np.asarray(chunked.pages_held()),
+                                  np.asarray(ref.pages_held()))
+    assert _partition_ok(chunked)
+    lv_c, lv_r = _logical_view(chunked), _logical_view(ref)
+    for row in range(b):
+        n = int(chunked.valid_len()[row])
+        pos = int(chunked.pos[row])
+        for t in range(pos - n, pos):
+            np.testing.assert_array_equal(
+                lv_c[row, t % cap], lv_r[row, t % cap],
+                err_msg=f"row {row} token {t}")
+    with pytest.raises(ValueError, match="append_chunk width"):
+        wide = _i8(b, cap + 1, g, hd)
+        base.append_chunk(jnp.asarray(wide), jnp.asarray(wide),
+                          jnp.asarray([1, 1, 1]))
+
+
+def test_ragged_qlens_mixed_call_matches_pure_paths():
+    """One ragged-q paged call carrying a decode row (q_len 1), a prefill
+    chunk row (q_len = chunk) and a dead row (q_len 0) matches the pure
+    decode kernel / one-shot onepass on the same streams; the dead row
+    emits zeros."""
+    b, g, hq, hd, page, npages = 3, 2, 4, 16, 32, 16
+    scales = ATT.QuantScales.per_tensor(S_Q, s_out=S_OUT)
+    pool = PagedKVState.init(b, 128, g, hd, page_size=page,
+                             num_pages=npages)
+    pre = _i8(b, 40, g, hd)
+    pool = pool.prefill_write(jnp.asarray(pre), jnp.asarray(pre),
+                              lengths=jnp.asarray([40, 17, 0]))
+    chunk = 12
+    kc = _i8(b, chunk, g, hd)
+    n_new = jnp.asarray([1, chunk, 0])
+    pool2 = pool.append_chunk(jnp.asarray(kc), jnp.asarray(kc), n_new)
+
+    q = _i8(b, hq, chunk, hd)
+    spec = ATT.AttentionSpec(mode="decode", impl="ita", layout="bhsd_paged",
+                             out_dtype="int8", q_len=chunk, ragged_q=True)
+    assert ATT.list_backends(spec) == ["ita_onepass_pallas"]
+    out = ATT.dispatch(jnp.asarray(q), pool2.k, pool2.v, spec=spec,
+                       scales=scales, q_offset=pool2.q_offset(n_new),
+                       kv_len=pool2.valid_len(),
+                       page_table=pool2.page_table, q_lens=n_new)
+
+    # row 0 (decode): equals the single-query decode kernel on the pool
+    dec_spec = spec.replace(q_len=1, ragged_q=False)
+    dec = ATT.dispatch(jnp.asarray(q[:, :, :1]), pool2.k, pool2.v,
+                       spec=dec_spec, scales=scales,
+                       q_offset=pool2.q_offset(1), kv_len=pool2.valid_len(),
+                       page_table=pool2.page_table,
+                       backend="ita_decode_pallas")
+    np.testing.assert_array_equal(np.asarray(out[0, :, 0]),
+                                  np.asarray(dec[0, :, 0]))
+    # row 2 (dead, q_len 0): all-zero output
+    assert not np.asarray(out[2]).any()
+    # row 1 (chunk): equals a one-shot onepass over the same stream
+    full = np.concatenate([pre[1:2, :17], kc[1:2]], axis=1)
+    solo = PagedKVState.init(1, 128, g, hd, page_size=page,
+                             num_pages=npages)
+    solo = solo.prefill_write(jnp.asarray(full), jnp.asarray(full))
+    one_spec = spec.replace(ragged_q=False)
+    one = ATT.dispatch(jnp.asarray(q[1:2]), solo.k, solo.v, spec=one_spec,
+                       scales=scales, q_offset=17, kv_len=solo.valid_len(),
+                       page_table=solo.page_table,
+                       backend="ita_onepass_pallas")
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(one[0]))
+
+    # dispatch handshake: q_lens required by exactly ragged_q specs
+    with pytest.raises(ValueError, match="q_lens"):
+        ATT.dispatch(jnp.asarray(q), pool2.k, pool2.v, spec=spec,
+                     scales=scales, q_offset=pool2.q_offset(n_new),
+                     kv_len=pool2.valid_len(), page_table=pool2.page_table)
+    with pytest.raises(ValueError, match="q_lens"):
+        ATT.dispatch(jnp.asarray(q), pool2.k, pool2.v, spec=one_spec,
+                     scales=scales, q_offset=pool2.q_offset(n_new),
+                     kv_len=pool2.valid_len(), page_table=pool2.page_table,
+                     q_lens=n_new)
+
+
+def test_ragged_q_capability_verdicts():
+    """ragged_q is a capability of exactly the fused one-pass kernels:
+    everything else declines with a reason, on serve specs it could
+    otherwise run."""
+    base = ATT.AttentionSpec(mode="decode", impl="ita", layout="bhsd_paged",
+                             out_dtype="int8", q_len=16)
+    assert ATT.list_backends(base.replace(ragged_q=True)) == \
+        ["ita_onepass_pallas"]
+    for impl, layout in (("ita", "bshd"), ("ibert", "bshd")):
+        spec = ATT.AttentionSpec(mode="decode", impl=impl, layout=layout,
+                                 q_len=4, ragged_q=True)
+        for name, verdict in ATT.backend_reasons(spec).items():
+            if name != "ita_onepass_pallas":
+                assert verdict is not True, (name, impl)

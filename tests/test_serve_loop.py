@@ -1,15 +1,30 @@
 """Continuous-batching serve loop: correctness vs solo generation,
 scheduler safety properties, and the paged generate() path.
 
-Acceptance properties (ISSUE 4):
+Acceptance properties (ISSUE 4 + ISSUE 5):
 - every request served through the continuous loop gets **bit-identical**
-  tokens to generating it alone (slot reuse, page realloc and admission
-  order change nothing about a sequence's arithmetic);
+  tokens to generating it alone, under BOTH admission modes — the
+  chunked-prefill default (prompts prefilled in chunks inside the fused
+  segments, page-native) and the stop-the-world ``admission="stall"``
+  reference (slot reuse, page realloc, chunking and admission order
+  change nothing about a sequence's arithmetic);
+- the decode-maximal mixed scheduler never exceeds its per-step token
+  budget and never starves a prefilling slot (seeded property test on
+  the segment's ``grants`` output);
+- sampled serving draws each request's tokens from its own
+  ``fold_in(key, request_index)`` stream: outputs are independent of
+  arrival order and bit-identical to solo generation with the folded key;
 - the admission scheduler never double-books a physical page or a slot
   (seeded property test over random traces via the audit hook);
 - ``generate(paged=True)`` is bit-identical to the ring layout;
 - reused ``caches=`` of the wrong paged geometry fail validation with
   the mismatched field named.
+
+Bit-parity across chunked ≡ stall ≡ solo requires the three paths to
+stream the same KV tile schedule: ``page_size`` equal to the fused
+prefill ``block_kv`` (128) and the solo/stall prefill pinned to the
+fused one-pass kernel (``attention_backend``) rather than the streaming
+XLA family.
 """
 
 import dataclasses
@@ -29,12 +44,21 @@ KEY = jax.random.PRNGKey(0)
 CFG = ModelConfig(name="serveloop-smoke", family="dense", d_model=64,
                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
                   vocab_size=128, layer_groups=((("attn",), 2),),
-                  dtype="float32", attention_impl="ita")
+                  dtype="float32", attention_impl="ita",
+                  attention_backend="ita_onepass_pallas")
 MAX_LEN = 128                   # one 128-page per slot: ring bkv == page
 
+# sliding-window variant: two pages per slot, prompts can straddle the
+# page boundary mid-chunk. The window (144) sits between the longest
+# prompt (140) and the longest stream (140 + 24 gen), so the window mask
+# actually *binds* during decode — swa serving requires window >= the
+# prompt (the window caps the cache), so it can never bind mid-prefill.
+CFG_SWA = dataclasses.replace(
+    CFG, name="serveloop-swa", layer_groups=((("swa",), 1),), window=144)
 
-def _params():
-    return init_model(KEY, CFG)
+
+def _params(cfg=CFG):
+    return init_model(KEY, cfg)
 
 
 def _trace(n, prng, max_prompt=12, max_gen=9, spread=3):
@@ -53,22 +77,64 @@ def _trace(n, prng, max_prompt=12, max_gen=9, spread=3):
 # Correctness: continuous serving == solo generation, token for token
 # ---------------------------------------------------------------------------
 
-def test_serve_continuous_matches_solo_generate():
+@pytest.mark.parametrize("admission", ["chunked", "stall"])
+def test_serve_continuous_matches_solo_generate(admission):
     params = _params()
     prng = np.random.default_rng(3)
     reqs = _trace(7, prng)
     res = serve_continuous(params, CFG, reqs, slots=3, segment=4,
-                           max_len=MAX_LEN, page_size=128)
+                           max_len=MAX_LEN, page_size=128,
+                           admission=admission, chunk_size=5)
     assert len(res.completed) == len(reqs)
     assert res.steps > 0 and res.total_tokens == sum(r.gen for r in reqs)
+    if admission == "chunked":
+        assert res.prefill_stall_s == 0.0   # no stop-the-world dispatch
+    else:
+        assert res.prefill_stall_s > 0.0
     for c in res.completed:
         r = reqs[c.index]
+        assert c.first_token_s >= c.arrived_s
         solo = generate(params, CFG, jnp.asarray(r.prompt)[None], r.gen,
                         max_len=MAX_LEN)
         np.testing.assert_array_equal(
             np.asarray(c.tokens), np.asarray(solo.tokens)[0],
-            err_msg=f"request {c.index} (gen={r.gen}) diverged from solo "
-                    f"generation")
+            err_msg=f"request {c.index} (gen={r.gen}, {admission}) "
+                    f"diverged from solo generation")
+
+
+@pytest.mark.parametrize("cfg,prompt_lens,gen,chunk", [
+    (CFG, (9, 60, 33), 4, 16),         # causal GQA, chunk < page
+    (CFG_SWA, (140, 130, 70), 24, 48),  # window binds in decode; chunks
+                                        # straddle the 128-token page
+                                        # boundary
+])
+def test_chunked_equals_stall_equals_solo_across_specs(cfg, prompt_lens,
+                                                       gen, chunk):
+    """The ISSUE-5 parity sweep: chunked ≡ stall ≡ solo `generate()` for
+    causal / sliding-window / GQA paged specs, including prompt chunks
+    that straddle page boundaries and window masks that cut keys."""
+    params = _params(cfg)
+    prng = np.random.default_rng(11)
+    max_len = 256
+    reqs = [ServeRequest(
+        prompt=prng.integers(0, cfg.vocab_size, n).astype(np.int32),
+        gen=gen, arrival=2 * i) for i, n in enumerate(prompt_lens)]
+    outs = {}
+    for admission in ("chunked", "stall"):
+        res = serve_continuous(params, cfg, reqs, slots=2, segment=5,
+                               max_len=max_len, page_size=128,
+                               admission=admission, chunk_size=chunk)
+        assert len(res.completed) == len(reqs)
+        outs[admission] = {c.index: np.asarray(c.tokens)
+                           for c in res.completed}
+    for i, r in enumerate(reqs):
+        solo = generate(params, cfg, jnp.asarray(r.prompt)[None], r.gen,
+                        max_len=max_len)
+        want = np.asarray(solo.tokens)[0]
+        np.testing.assert_array_equal(outs["chunked"][i], want,
+                                      err_msg=f"chunked req {i}")
+        np.testing.assert_array_equal(outs["stall"][i], want,
+                                      err_msg=f"stall req {i}")
 
 
 def test_serve_continuous_eos_cuts_sequences():
@@ -94,6 +160,106 @@ def test_serve_continuous_eos_cuts_sequences():
         want = solo[:hits[0] + 1] if hits.size else solo
         np.testing.assert_array_equal(toks, want,
                                       err_msg=f"request {c.index}")
+
+
+# ---------------------------------------------------------------------------
+# Sampled serving: per-request PRNG streams (fold_in by request id)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("admission", ["chunked", "stall"])
+def test_sampled_serving_independent_of_arrival_order(admission):
+    """Same seed, two arrival orders -> identical per-request tokens, and
+    each request's draws equal solo generation with the fold_in key."""
+    params = _params()
+    prng = np.random.default_rng(5)
+    prompts = [prng.integers(0, CFG.vocab_size,
+                             int(prng.integers(3, 12))).astype(np.int32)
+               for _ in range(5)]
+    gens = [int(prng.integers(2, 7)) for _ in range(5)]
+    key = jax.random.PRNGKey(42)
+
+    def run(arrivals):
+        reqs = [ServeRequest(prompt=prompts[i], gen=gens[i],
+                             arrival=arrivals[i]) for i in range(5)]
+        res = serve_continuous(params, CFG, reqs, slots=2, segment=4,
+                               max_len=MAX_LEN, page_size=128,
+                               admission=admission, chunk_size=6,
+                               temperature=0.8, key=key)
+        return {c.index: np.asarray(c.tokens) for c in res.completed}
+
+    a = run([0, 0, 1, 5, 9])
+    b = run([9, 4, 0, 0, 2])
+    for i in range(5):
+        np.testing.assert_array_equal(
+            a[i], b[i], err_msg=f"request {i} draws depended on arrival "
+                                f"order ({admission})")
+        solo = generate(params, CFG, jnp.asarray(prompts[i])[None], gens[i],
+                        max_len=MAX_LEN, temperature=0.8,
+                        key=jax.random.fold_in(key, i))
+        np.testing.assert_array_equal(
+            a[i], np.asarray(solo.tokens)[0],
+            err_msg=f"request {i} diverged from solo fold_in generation")
+
+
+# ---------------------------------------------------------------------------
+# Decode-maximal scheduler: budget + no-starvation (seeded property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mixed_scheduler_budget_and_progress(seed):
+    """The mixed segment's per-step grants: (1) never exceed the token
+    budget, (2) give every decoding live slot exactly one token, (3)
+    always advance at least one prefilling slot while any is live, and
+    (4) never push a cursor past its prompt length."""
+    from repro.runtime.generate import _admit_chunked, _serve_segment_fn
+    from repro.launch.steps import ServeSlotState, fold_keys
+
+    prng = np.random.default_rng(seed)
+    slots, chunk, segment = 4, 5, 6
+    budget = slots - 1 + chunk
+    params = _params()
+    prompt_pad = 24
+    plens = prng.integers(1, prompt_pad + 1, slots).astype(np.int32)
+    gens = prng.integers(1, 6, slots).astype(np.int32)
+    prompts = prng.integers(0, CFG.vocab_size,
+                            (slots, prompt_pad)).astype(np.int32)
+
+    caches = init_caches(CFG, slots, max_len=MAX_LEN, paged=True,
+                         page_size=128)
+    state = ServeSlotState.init(slots, prompt_pad, KEY)
+    state = _admit_chunked(
+        state, jnp.arange(slots, dtype=jnp.int32), jnp.asarray(prompts),
+        jnp.asarray(plens), jnp.asarray(gens),
+        fold_keys(KEY, jnp.arange(slots)))
+    seg = _serve_segment_fn(CFG, segment, False, None, 0, chunk, budget)
+
+    cursor = np.zeros(slots, np.int64)
+    for _ in range(6):                       # enough segments to drain
+        done_before = np.asarray(state.done).copy()
+        toks, emits, grants, state, caches, n = seg(params, state, caches,
+                                                    jnp.asarray(1.0))
+        grants = np.asarray(grants)          # (slots, segment)
+        emits = np.asarray(emits)
+        for t in range(segment):
+            g = grants[:, t]
+            assert g.sum() <= budget, (t, g, budget)
+            live_pre = cursor < plens
+            if live_pre.any() and not done_before.all():
+                # decode-maximal leaves >= 1 token of budget for the head
+                # prefilling slot every step
+                assert g[live_pre].sum() >= 1, (t, g, cursor, plens)
+            decoding = (cursor >= plens) & ~done_before
+            assert np.all(g[decoding] <= 1)
+            cursor = np.minimum(cursor + np.where(cursor < plens, g, 0),
+                                plens.astype(np.int64))
+            # done slots emitted this step finish; track via emits only
+            # for the live check above (coarse: done_before per segment)
+        assert np.all(cursor <= plens)
+        if np.asarray(state.done).all():
+            break
+    assert np.asarray(state.done).all(), "segments did not drain the batch"
+    np.testing.assert_array_equal(np.asarray(state.cursor), plens,
+                                  err_msg="a prefilling slot starved")
 
 
 # ---------------------------------------------------------------------------
@@ -127,8 +293,9 @@ def _audit_partition(caches, slot_req):
     assert len(set(live)) == len(live), f"request in two slots: {slot_req}"
 
 
-@pytest.mark.parametrize("seed", [0, 1, 2])
-def test_scheduler_never_double_books_page_or_slot(seed):
+@pytest.mark.parametrize("seed,admission", [(0, "chunked"), (1, "chunked"),
+                                            (2, "stall")])
+def test_scheduler_never_double_books_page_or_slot(seed, admission):
     params = _params()
     prng = np.random.default_rng(seed)
     reqs = _trace(8, prng, max_gen=7, spread=4)
@@ -142,23 +309,25 @@ def test_scheduler_never_double_books_page_or_slot(seed):
     # 3 slots' worth + 1 so admission actually gates on pages
     res = serve_continuous(params, CFG, reqs, slots=3, segment=4,
                            max_len=MAX_LEN, page_size=32,
-                           num_pages=3 * 4 + 2, audit=audit)
+                           num_pages=3 * 4 + 2, admission=admission,
+                           chunk_size=8, audit=audit)
     assert audits, "audit hook never ran"
     assert len(res.completed) == len(reqs)
 
 
 def test_serve_small_pages_wide_scratch():
-    """page_size < the ring block: the admission scratch ring is
-    block-aligned wider than the prompt pad, and adopt must bound the
-    *lengths* against the window, not the padded scratch width — long
-    prompts spanning several small pages still serve bit-exactly."""
+    """Stall admission with page_size < the ring block: the admission
+    scratch ring is block-aligned wider than the prompt pad, and adopt
+    must bound the *lengths* against the window, not the padded scratch
+    width — long prompts spanning several small pages still serve
+    bit-exactly (vs solo paged generation on the same page size)."""
     params = _params()
     prng = np.random.default_rng(9)
     reqs = [ServeRequest(prompt=prng.integers(0, CFG.vocab_size,
                                               130 + 8 * i).astype(np.int32),
                          gen=3, arrival=0) for i in range(3)]
     res = serve_continuous(params, CFG, reqs, slots=2, segment=4,
-                           max_len=192, page_size=64)
+                           max_len=192, page_size=64, admission="stall")
     assert len(res.completed) == len(reqs)
     for c in res.completed:
         r = reqs[c.index]
@@ -195,7 +364,18 @@ def test_serve_rejects_unservable_requests_and_configs():
                          [ServeRequest(prompt=np.zeros(80, np.int32),
                                        gen=2)],
                          slots=2, segment=4, max_len=64, page_size=32)
-    softcap_cfg = dataclasses.replace(CFG, attn_softcap=30.0)
+    with pytest.raises(ValueError, match="token_budget"):
+        serve_continuous(params, CFG,
+                         [ServeRequest(prompt=np.zeros(4, np.int32), gen=2)],
+                         slots=4, segment=4, max_len=MAX_LEN,
+                         token_budget=2)
+    with pytest.raises(ValueError, match="admission"):
+        serve_continuous(params, CFG,
+                         [ServeRequest(prompt=np.zeros(4, np.int32), gen=2)],
+                         slots=2, segment=4, max_len=MAX_LEN,
+                         admission="bogus")
+    softcap_cfg = dataclasses.replace(CFG, attn_softcap=30.0,
+                                      attention_backend="")
     with pytest.raises(ValueError, match="paged decode"):
         serve_continuous(params, softcap_cfg,
                          [ServeRequest(prompt=np.zeros(4, np.int32), gen=2)],
