@@ -25,10 +25,14 @@ Pieces:
 - ``KVCacheState``: typed int8 KV ring-buffer state (replaces the plain
   cache dicts).
 - ``PagedKVState``: the continuous-batching allocator — one shared
-  ``(num_pages, page_size, G, hd)`` arena, per-sequence page tables and
-  an on-device free stack; logical ring semantics, O(live tokens) memory.
+  ``(num_pages, page_size, G, hd)`` arena, per-sequence page tables, an
+  on-device free stack and per-page refcounts (prefix sharing +
+  copy-on-write); logical ring semantics, O(live tokens) memory.
   Served by the fused kernels through the ``bhsd_paged`` layout +
   ``dispatch(..., page_table=...)``.
+- ``PrefixIndex``: host-side chain-hash map from page-aligned prompt
+  chunks to the physical pages already holding their bytes — the lookup
+  structure behind serve-time KV prefix sharing.
 - Backend registry: each implementation declares ``supports(spec)``;
   ``dispatch`` runs the first eligible backend (or an explicit
   ``backend=`` override). Adding a kernel = one ``register_backend``
@@ -40,13 +44,15 @@ from repro.attention.registry import (Backend, BackendUnsupported,  # noqa: F401
                                       dispatch, get_backend, list_backends,
                                       register_backend)
 from repro.attention.spec import AttentionSpec, QuantScales  # noqa: F401
-from repro.attention.state import KVCacheState, PagedKVState  # noqa: F401
+from repro.attention.state import (KVCacheState, PagedKVState,  # noqa: F401
+                                   PrefixIndex)
 
 # Importing the module registers the built-in backends.
 from repro.attention import backends as _backends  # noqa: F401,E402
 
 __all__ = [
     "AttentionSpec", "QuantScales", "KVCacheState", "PagedKVState",
+    "PrefixIndex",
     "Backend", "BackendUnsupported", "dispatch", "list_backends",
     "backend_reasons", "register_backend", "get_backend", "all_backends",
 ]

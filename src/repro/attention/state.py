@@ -26,9 +26,22 @@ is bit-identical to the ring path — but physically a sequence only holds
 ``ceil(pos / page_size)`` pages, and ``release`` returns them to the
 pool the moment the sequence finishes: KV memory is O(tokens live), not
 O(B * max_len) reserved. Physical page 0 is the **parking page** — never
-allocated, it absorbs masked writes (dead batch slots, right-pad tokens)
-and backs unassigned page-table entries, so every scatter/gather stays
-in bounds without branches.
+allocated and never written (masked writes scatter to an out-of-bounds
+index and are dropped), it backs unassigned page-table entries so every
+gather stays in bounds without branches, and its bytes stay zero for the
+life of the pool.
+
+Pages carry a **refcount** (``ref_count``, per physical page): rows
+admitted with a shared prompt prefix point their leading page-table
+entries at another row's pages (``adopt_prefix``, +1 each), the
+serving-layer prefix index pins registered pages (``incref_pages``) so
+they outlive their original row, and ``release``/``decref_pages`` only
+push a page back onto the free stack when its count reaches zero. The
+append paths copy-on-write: a write landing on a page with refcount > 1
+first copies it to a freshly popped page, so sharers never observe each
+other's bytes. Sharing is pure bookkeeping — the kernels read whatever
+the page tables say, so the paged layout stays bit-identical to the
+ring path whether or not pages are shared.
 """
 
 from __future__ import annotations
@@ -206,6 +219,14 @@ class PagedKVState:
     ``free_stack[:free_top]`` are free. Allocation happens *inside* jit
     (a masked pop per page) so the fused generation scan never leaves the
     device to grow a sequence.
+
+    ``ref_count``: ``(P,)`` int32, references per physical page — one per
+    page-table entry within a row's held prefix, plus one per prefix-index
+    pin. Exclusively-held pages sit at 1; prefix sharing raises a page
+    above 1, arming copy-on-write in the append paths. The allocator
+    invariant (``check_invariants``): every page is on the free stack
+    XOR referenced with count >= 1, and the count equals the number of
+    page-table references plus pins.
     """
 
     k: Any                      # (P, page, G, hd)
@@ -214,6 +235,7 @@ class PagedKVState:
     pos: Any                    # (B,) int32
     free_stack: Any             # (P,) int32
     free_top: Any               # () int32 — number of free pages
+    ref_count: Any = None       # (P,) int32 — references per physical page
     k_scale: Any = None         # (G,) f32 per-head scales, optional
     v_scale: Any = None
 
@@ -249,6 +271,7 @@ class PagedKVState:
                    pos=jnp.zeros((batch,), jnp.int32),
                    free_stack=stack,
                    free_top=jnp.asarray(num_pages - 1, jnp.int32),
+                   ref_count=jnp.zeros((num_pages,), jnp.int32),
                    k_scale=scales, v_scale=scales)
 
     def with_scales(self, k_scale, v_scale) -> "PagedKVState":
@@ -291,10 +314,11 @@ class PagedKVState:
 
     def _alloc(self, need: jax.Array) -> "PagedKVState":
         """Pop ``need[b]`` pages per row off the free stack into each
-        row's next unassigned page-table entries. Callers guarantee
-        ``sum(need) <= free_top`` (the admission scheduler's invariant;
-        ``tests/test_paged.py`` property-checks it) — an overdrawn pool
-        drives ``free_top`` negative, which ``oversubscribed`` exposes."""
+        row's next unassigned page-table entries (refcount 1 — the row
+        is the sole holder). Callers guarantee ``sum(need) <= free_top``
+        (the admission scheduler's invariant; ``tests/test_paged.py``
+        property-checks it) — an overdrawn pool drives ``free_top``
+        negative, which ``oversubscribed`` exposes."""
         b = need.shape[0]
         npps = self.pages_per_seq
         held = self.pages_held()
@@ -306,33 +330,173 @@ class PagedKVState:
         dest = jnp.where(take, held[:, None] + cols, npps)  # OOB -> drop
         bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
         pt = self.page_table.at[bidx, dest].set(phys, mode="drop")
+        ref = self.ref_count.at[jnp.where(take, phys, self.num_pages)] \
+            .set(1, mode="drop")
         top = self.free_top - jnp.sum(take.astype(jnp.int32))
-        return dataclasses.replace(self, page_table=pt, free_top=top)
+        return dataclasses.replace(self, page_table=pt, ref_count=ref,
+                                   free_top=top)
 
     def oversubscribed(self) -> jax.Array:
         """True when an allocation overdrew the pool (scheduler bug)."""
         return self.free_top < 0
 
+    def _decref(self, dec: jax.Array) -> "PagedKVState":
+        """Apply per-page refcount decrements ``dec`` (P,) int32, pushing
+        pages whose count reaches zero back onto the free stack in
+        ascending page-id order (a fixed, deterministic order regardless
+        of which rows dropped them). Guarded against stray decrements:
+        a page already at count 0 (free) can neither underflow nor be
+        pushed a second time, which is what makes ``release`` and
+        ``decref_pages`` idempotent at the allocator level."""
+        freed = (dec > 0) & (self.ref_count > 0) & (self.ref_count <= dec)
+        freed = freed.at[PARKING_PAGE].set(False)
+        ref = jnp.maximum(self.ref_count - dec, 0)
+        rank = jnp.cumsum(freed.astype(jnp.int32)) - 1
+        dest = jnp.where(freed, self.free_top + rank, self.num_pages)
+        pages = jnp.arange(self.num_pages, dtype=jnp.int32)
+        stack = self.free_stack.at[dest].set(pages, mode="drop")
+        top = self.free_top + jnp.sum(freed.astype(jnp.int32))
+        return dataclasses.replace(self, ref_count=ref, free_stack=stack,
+                                   free_top=top)
+
     def release(self, finished: jax.Array) -> "PagedKVState":
-        """Return the pages of every row with ``finished[b]`` to the free
-        stack, clear those rows' tables and reset their ``pos`` to 0 —
-        the continuous-batching hand-back that makes a freed slot's
-        memory immediately admittable."""
+        """Drop one reference per page held by every row with
+        ``finished[b]``, clear those rows' tables and reset their ``pos``
+        to 0 — the continuous-batching hand-back. A page returns to the
+        free stack only at refcount zero, so shared prefix pages survive
+        until their last holder (row or index pin) lets go.
+
+        Idempotent: a released (or never-admitted) row holds nothing —
+        ``pos == 0`` and a parked table — so releasing it again, or
+        releasing with overlapping masks, moves no pages and cannot
+        double-enter the free stack. Two finished rows sharing a page
+        decrement it twice through one per-page count, pushing it once."""
         finished = jnp.asarray(finished, jnp.bool_)
         npps = self.pages_per_seq
         held = self.pages_held()
         give = finished[:, None] \
-            & (jnp.arange(npps, dtype=jnp.int32)[None, :] < held[:, None])
-        flat_give = give.reshape(-1)
-        flat_pages = self.page_table.reshape(-1)
-        rank = jnp.cumsum(flat_give.astype(jnp.int32)) - 1
-        dest = jnp.where(flat_give, self.free_top + rank, self.num_pages)
-        stack = self.free_stack.at[dest].set(flat_pages, mode="drop")
-        top = self.free_top + jnp.sum(flat_give.astype(jnp.int32))
-        pt = jnp.where(finished[:, None], PARKING_PAGE, self.page_table)
-        pos = jnp.where(finished, 0, self.pos)
-        return dataclasses.replace(self, page_table=pt, pos=pos,
-                                   free_stack=stack, free_top=top)
+            & (jnp.arange(npps, dtype=jnp.int32)[None, :] < held[:, None]) \
+            & (self.page_table != PARKING_PAGE)
+        idx = jnp.where(give, self.page_table, self.num_pages)
+        dec = jnp.zeros((self.num_pages,), jnp.int32) \
+            .at[idx.reshape(-1)].add(1, mode="drop")
+        new = self._decref(dec)
+        pt = jnp.where(finished[:, None], PARKING_PAGE, new.page_table)
+        pos = jnp.where(finished, 0, new.pos)
+        return dataclasses.replace(new, page_table=pt, pos=pos)
+
+    # -- prefix sharing ---------------------------------------------------
+
+    def adopt_prefix(self, rows: jax.Array, pages: jax.Array,
+                     n_pages: jax.Array, n_tokens: jax.Array
+                     ) -> "PagedKVState":
+        """Admission-side prefix adoption: point row ``rows[i]``'s first
+        ``n_pages[i]`` page-table entries at the *existing* physical
+        pages ``pages[i, :n_pages[i]]`` (+1 refcount each) and start the
+        row's stream at ``pos = n_tokens[i]`` — the shared-prefix admit,
+        where the leading prompt pages are another request's bytes and
+        are never re-prefilled. Copy-on-write protects the donors if
+        this row ever wraps onto the shared pages.
+
+        ``rows[i] < 0`` marks a dropped dummy entry of a fixed-width
+        admission batch. Target rows must be fresh (released: ``pos`` 0,
+        table parked). ``n_tokens`` must equal ``n_pages * page_size`` —
+        sharing is page-granular (the prefix index hashes page-aligned
+        token chunks), so a partial page is never adopted."""
+        b = self.batch
+        rows = jnp.asarray(rows, jnp.int32).reshape(-1)
+        n = rows.shape[0]
+        pages = jnp.asarray(pages, jnp.int32).reshape(n, -1)
+        n_pages = jnp.asarray(n_pages, jnp.int32).reshape(n)
+        n_tokens = jnp.asarray(n_tokens, jnp.int32).reshape(n)
+        valid = rows >= 0
+        rowsq = jnp.where(valid, rows, b)
+        cols = jnp.arange(pages.shape[1], dtype=jnp.int32)[None, :]
+        take = valid[:, None] & (cols < n_pages[:, None]) \
+            & (pages != PARKING_PAGE)
+        dcol = jnp.where(take, cols, self.pages_per_seq)
+        pt = self.page_table.at[rowsq[:, None], dcol].set(pages,
+                                                          mode="drop")
+        ref = self.ref_count.at[jnp.where(take, pages, self.num_pages)] \
+            .add(1, mode="drop")
+        pos = self.pos.at[rowsq].set(n_tokens * valid.astype(jnp.int32),
+                                     mode="drop")
+        return dataclasses.replace(self, page_table=pt, ref_count=ref,
+                                   pos=pos)
+
+    def incref_pages(self, pages: jax.Array) -> "PagedKVState":
+        """+1 refcount per non-negative entry of ``pages`` (flat int32;
+        negative = padding, dropped) — the prefix index's *pin*: a
+        pinned page survives its original row's release, keeping a
+        registered prefix adoptable until the index evicts it."""
+        pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+        idx = jnp.where((pages > PARKING_PAGE) & (pages < self.num_pages),
+                        pages, self.num_pages)
+        return dataclasses.replace(
+            self, ref_count=self.ref_count.at[idx].add(1, mode="drop"))
+
+    def decref_pages(self, pages: jax.Array) -> "PagedKVState":
+        """Drop one reference per non-negative entry of ``pages`` (the
+        index unpin / eviction); pages reaching zero return to the free
+        stack. Duplicate ids in one call decrement once each."""
+        pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+        idx = jnp.where(pages >= 0, pages, self.num_pages)
+        dec = jnp.zeros((self.num_pages,), jnp.int32) \
+            .at[idx].add(1, mode="drop")
+        return self._decref(dec)
+
+    def _cow(self, first: jax.Array, n_new: jax.Array,
+             max_width: int) -> "PagedKVState":
+        """Copy-on-write the pages the rows are about to overwrite: any
+        logical page holding write slots ``[first[b], first[b]+n_new[b])``
+        (ring coordinates) whose physical page is shared (refcount > 1)
+        is copied to a freshly popped page before the append lands — the
+        diverging row repoints its table entry and drops its reference;
+        the pristine page stays with the remaining holders, or returns to
+        the free stack if every holder diverged in this same call.
+        ``max_width`` is the static bound on ``n_new`` (the presented
+        token-block width). Touched pages that are unassigned (parking)
+        or exclusively held are untouched — the unshared path costs one
+        refcount gather. Callers guarantee pop headroom the same way they
+        do for ``_alloc``: total references (row holds + pins) never
+        exceed the allocatable pool, and a COW swap keeps that sum
+        constant."""
+        ps, cs = self.page_size, self.capacity
+        npps = self.pages_per_seq
+        b = first.shape[0]
+        maxp = min(_ceil_div(max_width + ps - 1, ps), npps)
+        first = jnp.asarray(first, jnp.int32)
+        n_new = jnp.asarray(n_new, jnp.int32)
+        p0 = (first % cs) // ps
+        npages = jnp.where(n_new > 0,
+                           jnp.minimum(_ceil_div(first % ps + n_new, ps),
+                                       npps), 0)
+        cols = jnp.arange(maxp, dtype=jnp.int32)[None, :]
+        jc = (p0[:, None] + cols) % npps                   # (B, maxp)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        phys = self.page_table[bidx, jc]
+        shared = (cols < npages[:, None]) & (phys != PARKING_PAGE) \
+            & (self.ref_count[phys] > 1)
+        # pop one fresh page per shared entry (row-major, like _alloc)
+        flat = shared.reshape(-1)
+        rank = jnp.cumsum(flat.astype(jnp.int32)) - 1
+        sidx = self.free_top - 1 - rank
+        fresh = self.free_stack[jnp.clip(sidx, 0, self.num_pages - 1)] \
+            .reshape(b, maxp)
+        src = jnp.where(shared, phys, PARKING_PAGE).reshape(-1)
+        dst = jnp.where(shared, fresh, self.num_pages).reshape(-1)
+        k = self.k.at[dst].set(self.k[src], mode="drop")
+        v = self.v.at[dst].set(self.v[src], mode="drop")
+        pt = self.page_table.at[bidx, jnp.where(shared, jc, npps)] \
+            .set(fresh, mode="drop")
+        ref = self.ref_count.at[dst].set(1, mode="drop")
+        dec = jnp.zeros((self.num_pages,), jnp.int32) \
+            .at[jnp.where(shared, phys, self.num_pages).reshape(-1)] \
+            .add(1, mode="drop")
+        top = self.free_top - jnp.sum(flat.astype(jnp.int32))
+        cow = dataclasses.replace(self, k=k, v=v, page_table=pt,
+                                  ref_count=ref, free_top=top)
+        return cow._decref(dec)
 
     # -- writes -----------------------------------------------------------
 
@@ -343,8 +507,8 @@ class PagedKVState:
         outcome as the ring's ``prefill_write`` minus wrap-eviction: a
         prompt longer than ``capacity`` is refused (serving sizes the
         window first). Only ``ceil(len/page_size)`` pages are allocated
-        per row — right-pad columns scatter into the parking page, so a
-        ragged batch holds pages for its *tokens*, not its padding."""
+        per row — right-pad columns are dropped, so a ragged batch holds
+        pages for its *tokens*, not its padding."""
         return self.write_prompts(k_q, v_q, lengths=lengths)
 
     def write_prompts(self, k_q: jax.Array, v_q: jax.Array,
@@ -394,14 +558,19 @@ class PagedKVState:
         t = jnp.arange(s, dtype=jnp.int32)
         # rows == b clamps in the gather; the result is discarded below.
         # Columns past the window (S > capacity sources) clamp to the last
-        # logical page — always pad columns, masked to parking below.
+        # logical page — always pad columns, dropped below.
         cols = jnp.minimum(t // ps, self.pages_per_seq - 1)
         phys = new.page_table[jnp.minimum(rows, b - 1)][:, cols]     # (n, s)
         real = valid[:, None] & (t[None, :] < new_pos[:, None])
-        phys = jnp.where(real, phys, PARKING_PAGE)
+        # pad columns / dummy rows: OOB page index + mode="drop" discards
+        # the write entirely — nothing ever scatters into the parking
+        # page (its bytes stay zero), and with the duplicate parking
+        # targets gone the scatter is duplicate-free, i.e. deterministic
+        # rather than relying on an unspecified duplicate winner
+        phys = jnp.where(real, phys, self.num_pages)
         slot = jnp.broadcast_to((t % ps)[None, :], (n, s))
-        k_t = new.k.at[phys, slot].set(k_q)
-        v_t = new.v.at[phys, slot].set(v_q)
+        k_t = new.k.at[phys, slot].set(k_q, mode="drop")
+        v_t = new.v.at[phys, slot].set(v_q, mode="drop")
         pos = self.pos.at[rows].set(new_pos, mode="drop")
         return dataclasses.replace(new, k=k_t, v=v_t, pos=pos)
 
@@ -411,29 +580,35 @@ class PagedKVState:
         path: rows crossing a page boundary pop a fresh page off the free
         stack *on device* (no host round-trip inside the fused scan);
         once a row has wrapped its logical window its existing pages are
-        reused in place, exactly like the ring. ``live`` masks dead slots
-        (writes park, ``pos`` frozen)."""
+        reused in place, exactly like the ring. A wrap onto a *shared*
+        page (refcount > 1) copies it first (``_cow``) so the other
+        holders keep the pristine bytes. ``live`` masks dead slots
+        (writes dropped, ``pos`` frozen). Bursts longer than the window
+        write only their surviving tail; the survivor slots are
+        consecutive-mod-C and masked writes are dropped outright, so the
+        scatter is duplicate-free — two runs produce identical bytes."""
         b, s_new = k_q.shape[:2]
         ps, cs = self.page_size, self.capacity
         if live is None:
             live = jnp.ones((b,), jnp.bool_)
         live_i = live.astype(jnp.int32)
-        held = self.pages_held()
-        want = jnp.minimum(_ceil_div(self.pos + s_new, ps),
-                           self.pages_per_seq)
-        new = self._alloc((want - held) * live_i)
-
         start = max(s_new - cs, 0)
         n_eff = s_new - start
-        toks = (self.pos[:, None] + start
+        state = self._cow(self.pos + start, n_eff * live_i, n_eff)
+        held = state.pages_held()
+        want = jnp.minimum(_ceil_div(state.pos + s_new, ps),
+                           state.pages_per_seq)
+        new = state._alloc((want - held) * live_i)
+
+        toks = (state.pos[:, None] + start
                 + jnp.arange(n_eff, dtype=jnp.int32)[None, :]) % cs
         bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
         phys = new.page_table[bidx, toks // ps]            # (B, n_eff)
-        phys = jnp.where(live[:, None], phys, PARKING_PAGE)
-        k_t = new.k.at[phys, toks % ps].set(k_q[:, start:])
-        v_t = new.v.at[phys, toks % ps].set(v_q[:, start:])
+        phys = jnp.where(live[:, None], phys, self.num_pages)  # drop dead
+        k_t = new.k.at[phys, toks % ps].set(k_q[:, start:], mode="drop")
+        v_t = new.v.at[phys, toks % ps].set(v_q[:, start:], mode="drop")
         return dataclasses.replace(new, k=k_t, v=v_t,
-                                   pos=self.pos + s_new * live_i)
+                                   pos=state.pos + s_new * live_i)
 
     def append_chunk(self, k_q: jax.Array, v_q: jax.Array,
                      n_new: jax.Array) -> "PagedKVState":
@@ -443,10 +618,11 @@ class PagedKVState:
         boundaries and popping fresh pages off the free stack *inside
         jit* exactly like ``decode_append``. Columns beyond a row's count
         (decode rows in a mixed chunked-prefill batch present 1 real
-        token; dead rows 0) scatter into the parking page and that row's
-        ``pos`` advances by its own ``n_new`` only — the write primitive
-        of the mixed serve step, where one dispatch carries decode rows
-        next to prefill chunks with no ring scratch or host bytes-copy."""
+        token; dead rows 0) are dropped and that row's ``pos`` advances
+        by its own ``n_new`` only — the write primitive of the mixed
+        serve step, where one dispatch carries decode rows next to
+        prefill chunks with no ring scratch or host bytes-copy. Shared
+        pages in the write range are copied first (``_cow``)."""
         b, s = k_q.shape[:2]
         ps, cs = self.page_size, self.capacity
         if s > cs:
@@ -454,24 +630,194 @@ class PagedKVState:
                 f"append_chunk width {s} exceeds the per-sequence window "
                 f"{cs}; split the chunk (serving sizes chunk <= capacity)")
         n_new = jnp.clip(jnp.asarray(n_new, jnp.int32).reshape(b), 0, s)
-        held = self.pages_held()
-        want = jnp.minimum(_ceil_div(self.pos + n_new, ps),
-                           self.pages_per_seq)
-        new = self._alloc(want - held)
+        state = self._cow(self.pos, n_new, s)
+        held = state.pages_held()
+        want = jnp.minimum(_ceil_div(state.pos + n_new, ps),
+                           state.pages_per_seq)
+        new = state._alloc(want - held)
 
         cols = jnp.arange(s, dtype=jnp.int32)[None, :]
-        toks = (self.pos[:, None] + cols) % cs             # (B, S)
+        toks = (state.pos[:, None] + cols) % cs            # (B, S)
         bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
         real = cols < n_new[:, None]
         phys = jnp.where(real, new.page_table[bidx, toks // ps],
-                         PARKING_PAGE)
-        k_t = new.k.at[phys, toks % ps].set(k_q)
-        v_t = new.v.at[phys, toks % ps].set(v_q)
-        return dataclasses.replace(new, k=k_t, v=v_t, pos=self.pos + n_new)
+                         self.num_pages)                   # pad -> drop
+        k_t = new.k.at[phys, toks % ps].set(k_q, mode="drop")
+        v_t = new.v.at[phys, toks % ps].set(v_q, mode="drop")
+        return dataclasses.replace(new, k=k_t, v=v_t,
+                                   pos=state.pos + n_new)
+
+    # -- debug ------------------------------------------------------------
+
+    def check_invariants(self, pins=None) -> None:
+        """Host-side allocator invariant check (debug mode / tests — np
+        round-trips the whole state, never the hot path):
+
+        * every physical page is on the free stack XOR referenced (held
+          by >= 1 page-table prefix entry or pinned) — no double-booking,
+          no leaked pages;
+        * each page's ``ref_count`` equals its page-table references plus
+          its ``pins`` entry (the prefix index's host-side pin ledger:
+          a ``(P,)`` array-like or ``{page: count}`` dict);
+        * the parking page is never referenced, never free-listed, and
+          no row's held prefix points at it after admission;
+        * ``free_top`` stays within ``[0, num_pages - 1]`` and the free
+          list holds no duplicates.
+
+        Raises ``AssertionError`` naming the violated condition."""
+        import numpy as np
+
+        pt = np.asarray(self.page_table)
+        ref = np.asarray(self.ref_count)
+        held = np.asarray(self.pages_held())
+        top = int(self.free_top)
+        P = self.num_pages
+        assert 0 <= top <= P - 1, f"free_top {top} outside [0, {P - 1}]"
+        free = np.asarray(self.free_stack)[:top]
+        free_set = set(free.tolist())
+        assert len(free_set) == top, "free stack holds duplicate pages"
+        assert PARKING_PAGE not in free_set, "parking page on free stack"
+
+        counts = np.zeros(P, np.int64)
+        for row in range(self.batch):
+            pages = pt[row, :int(held[row])]
+            assert PARKING_PAGE not in pages, (
+                f"live row {row} points at the parking page: {pages}")
+            np.add.at(counts, pages, 1)
+        if pins is not None:
+            if isinstance(pins, dict):
+                for p, c in pins.items():
+                    counts[p] += c
+            else:
+                counts += np.asarray(pins, np.int64)
+        assert ref[PARKING_PAGE] == 0 and counts[PARKING_PAGE] == 0, \
+            "parking page acquired a refcount"
+        for p in range(1, P):
+            assert ref[p] == counts[p], (
+                f"page {p}: ref_count {ref[p]} != references {counts[p]}")
+            assert (p in free_set) ^ (counts[p] >= 1), (
+                f"page {p}: free={p in free_set}, references={counts[p]} "
+                f"(every page must be free xor referenced)")
 
 
 jax.tree_util.register_dataclass(
     PagedKVState,
     data_fields=("k", "v", "page_table", "pos", "free_stack", "free_top",
-                 "k_scale", "v_scale"),
+                 "ref_count", "k_scale", "v_scale"),
     meta_fields=())
+
+
+# ---------------------------------------------------------------------------
+# Prefix index (host side)
+# ---------------------------------------------------------------------------
+
+class PrefixIndex:
+    """Host-side map from prompt prefixes to the physical pages already
+    holding their K/V bytes — the lookup structure behind serve-time
+    prefix sharing.
+
+    Granularity is exactly one page: entry ``j`` keys on a *chain hash*
+    of the prompt's ``j``-th ``page_size``-token chunk and chunk
+    ``j-1``'s key, so a hit for page ``j`` implies the entire leading
+    ``(j+1) * page_size`` tokens match — a lookup walks the chain and
+    returns the longest registered prefix. One page id is valid for
+    every layer's pool at once because the per-layer allocators run in
+    lockstep (identical op sequence → identical tables and stacks),
+    which the serving layer validates at startup.
+
+    The index holds one *pin* (+1 refcount, via
+    ``PagedKVState.incref_pages``) per registered page, so registered
+    prefixes outlive their original request; ``evict_lru`` hands back
+    the oldest unprotected pages for the caller to unpin
+    (``decref_pages``) when the pool needs room. Why page bytes are
+    reusable at all: a token's K/V depend only on (token id, stream
+    position), so a page's bytes are a pure function of the chunk's
+    tokens and its page-aligned position — exactly what the chain key
+    encodes."""
+
+    def __init__(self, page_size: int):
+        self.page_size = int(page_size)
+        self._entries: dict = {}        # chain key -> physical page id
+        self._page_key: dict = {}       # physical page id -> chain key
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pinned_pages(self):
+        """Snapshot of every registered (pinned) physical page id."""
+        return list(self._page_key)
+
+    def _chain_keys(self, tokens, n_chunks: int):
+        import numpy as np
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int64).reshape(-1))
+        prev = self.page_size                     # chain seed
+        keys = []
+        for j in range(n_chunks):
+            chunk = toks[j * self.page_size:(j + 1) * self.page_size]
+            prev = hash((prev, chunk.tobytes()))
+            keys.append(prev)
+        return keys
+
+    def lookup(self, tokens, max_tokens: int | None = None):
+        """Longest registered page-aligned prefix of ``tokens`` covering
+        at most ``max_tokens`` tokens. Returns the physical page ids (a
+        possibly empty list); a lookup refreshes the hit entries' LRU
+        position."""
+        import numpy as np
+        n_tok = int(np.asarray(tokens).size)
+        if max_tokens is not None:
+            n_tok = min(n_tok, int(max_tokens))
+        pages = []
+        for key in self._chain_keys(tokens, n_tok // self.page_size):
+            page = self._entries.get(key)
+            if page is None:
+                break
+            del self._entries[key]                # LRU touch: re-insert
+            self._entries[key] = page
+            pages.append(page)
+        return pages
+
+    def register(self, tokens, page_ids):
+        """Register the pages backing ``tokens``' leading full chunks:
+        ``page_ids[j]`` holds chunk ``j``'s bytes. Chunks already
+        registered (by any request) are skipped; registration stops at
+        the first conflict so the chain stays walkable. Returns the
+        newly indexed page ids — the caller must pin exactly those
+        (``incref_pages``) before the donor row can release them."""
+        import numpy as np
+        page_ids = [int(p) for p in np.asarray(page_ids).reshape(-1)]
+        new = []
+        for key, page in zip(self._chain_keys(tokens, len(page_ids)),
+                             page_ids):
+            if page == PARKING_PAGE:
+                break
+            have = self._entries.get(key)
+            if have is not None:
+                continue                          # chunk already indexed
+            if page in self._page_key:
+                break                             # page serves another key
+            self._entries[key] = page
+            self._page_key[page] = key
+            new.append(page)
+        return new
+
+    def evict_lru(self, n: int, protected=frozenset()):
+        """Drop up to ``n`` least-recently-used entries whose page is not
+        ``protected`` (pages currently adopted by an active request must
+        keep their pin — the serving layer's budget accounting depends
+        on it). Returns the evicted page ids for the caller to unpin.
+        Evicting a chain's head orphans its tail entries (unreachable by
+        lookup); they stay evictable and age out under the same LRU
+        pressure, so their pins are reclaimed, just not instantly."""
+        evicted = []
+        for key in list(self._entries):
+            if len(evicted) >= n:
+                break
+            page = self._entries[key]
+            if page in protected:
+                continue
+            del self._entries[key]
+            del self._page_key[page]
+            evicted.append(page)
+        return evicted

@@ -98,6 +98,17 @@ def main():
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step token budget of the decode-maximal "
                          "scheduler (default slots - 1 + chunk_size)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="share identical prompt prefixes across requests "
+                         "through the paged pool (copy-on-write, chunked "
+                         "admission only): matching page-aligned prefix "
+                         "chunks adopt existing pages instead of "
+                         "re-prefilling")
+    ap.add_argument("--system-prompt-len", type=int, default=0,
+                    help="prepend a common system prefix of this many "
+                         "tokens to every --continuous request (makes "
+                         "--prefix-sharing observable: >= page-size "
+                         "tokens shared per request)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
@@ -121,19 +132,23 @@ def main():
             params = init_model(key, cfg)
             arrivals = np.cumsum(rng.exponential(1.0 / max(args.rate, 1e-6),
                                                  args.requests)).astype(int)
+            system = rng.integers(0, cfg.vocab_size, args.system_prompt_len
+                                  ).astype(np.int32)
             reqs = [ServeRequest(
-                prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(
-                    max(1, args.prompt_len // 2), args.prompt_len + 1))
-                ).astype(np.int32),
+                prompt=np.concatenate([system, rng.integers(
+                    0, cfg.vocab_size, int(rng.integers(
+                        max(1, args.prompt_len // 2), args.prompt_len + 1))
+                    ).astype(np.int32)]),
                 gen=int(rng.integers(max(2, args.gen // 4), args.gen + 1)),
                 arrival=int(t)) for t in arrivals]
             res = serve_continuous(
                 params, cfg, reqs, slots=args.batch, segment=args.segment,
-                max_len=args.prompt_len + args.gen,
+                max_len=args.system_prompt_len + args.prompt_len + args.gen,
                 page_size=args.page_size, temperature=args.temperature,
                 key=key if args.temperature > 0 else None,
                 eos_id=args.eos_id, admission=args.admission,
-                chunk_size=args.chunk_size, token_budget=args.token_budget)
+                chunk_size=args.chunk_size, token_budget=args.token_budget,
+                prefix_sharing=args.prefix_sharing)
         util = max((u for _, u in res.page_util), default=0.0)
         print(f"[serve] arch={cfg.name} continuous slots={args.batch} "
               f"segment={args.segment} page_size={args.page_size} "
@@ -150,6 +165,12 @@ def main():
               f"{res.ttft_quantile(0.5)*1e3:.0f} ms p95 "
               f"{res.ttft_quantile(0.95)*1e3:.0f} ms; prefill-stall "
               f"{res.prefill_stall_frac:.0%}; peak page util {util:.0%}")
+        if args.prefix_sharing:
+            print(f"[serve] prefix sharing: {res.prefix_hits}/"
+                  f"{len(res.completed)} hits "
+                  f"({res.prefix_hit_rate:.0%}), "
+                  f"{res.shared_prefix_tokens} prompt tokens adopted "
+                  f"from shared pages ({res.prefill_tokens} prefilled)")
         return
 
     with mesh, use_hints(mesh):

@@ -146,10 +146,11 @@ def _leaf_cache_spec(path, leaf, batch, mesh):
     bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     shape = leaf.shape
     nd = len(shape)
-    # page_table/free_stack/free_top: paged-pool bookkeeping — tiny int32
-    # vectors the on-device allocator indexes globally; replicate.
+    # page_table/free_stack/free_top/ref_count: paged-pool bookkeeping —
+    # tiny int32 vectors the on-device allocator indexes globally;
+    # replicate.
     if nd <= 1 or name in ("pos", "k_scale", "v_scale", "page_table",
-                           "free_stack", "free_top"):
+                           "free_stack", "free_top", "ref_count"):
         return P()
     b_ok = nd >= 2 and shape[1] == batch \
         and batch % _axis_size(mesh, bax) == 0

@@ -215,9 +215,12 @@ class ServeSlotState:
     and prefilled chunk-by-chunk inside the segments (``cursor`` <
     ``plen`` marks the prefill phase), so there is no stop-the-world
     prompt dispatch and no ring-scratch bytes-copy on the chunked path.
-    ``keys`` is a per-slot PRNG stream (``fold_in`` of the serve key by
-    request id), making sampled outputs independent of admission
-    interleaving."""
+    A prefix-sharing admit starts ``cursor``/``pos`` at the shared token
+    count instead of 0 (the leading prompt pages were adopted from the
+    pool, never re-prefilled); the mixed segment body needs no change —
+    it simply sees fewer prompt tokens left. ``keys`` is a per-slot PRNG
+    stream (``fold_in`` of the serve key by request id), making sampled
+    outputs independent of admission interleaving."""
 
     tok: Any                  # (B, 1) int32 — last sampled token
     pos: Any                  # (B,) int32 — stream position (cache pos)
@@ -256,6 +259,57 @@ def fold_keys(key, ids):
     own id, not of admission interleaving."""
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(
         jnp.asarray(ids, jnp.int32))
+
+
+def admit_rows(state, slot_ids):
+    """OOB-drop row indices for a fixed-width admission batch (padding
+    rows carry slot_id -1 and drop out of every scatter)."""
+    return jnp.where(slot_ids >= 0, slot_ids, state.done.shape[0])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
+                  shared=None):
+    """Chunked admission is *only* this state write (plus the host's page
+    reservation): enqueue the prompt token ids and arm the slot's phase
+    state — the segments prefill chunk-by-chunk, page-native. No prompt
+    forward, no ring scratch, no bytes-copy. ``shared`` (n,) int32 is the
+    per-row count of prompt tokens already covered by adopted prefix
+    pages (``PagedKVState.adopt_prefix`` ran in the same admission
+    round): ``cursor`` and ``pos`` start there, so chunked prefill picks
+    up at the first unshared token and the skipped tokens are never
+    forwarded at all."""
+    rows = admit_rows(state, slot_ids)
+    start = jnp.zeros_like(lengths) if shared is None \
+        else jnp.asarray(shared, jnp.int32)
+    return dataclasses.replace(
+        state,
+        prompt_buf=state.prompt_buf.at[rows].set(prompts, mode="drop"),
+        plen=state.plen.at[rows].set(lengths, mode="drop"),
+        cursor=state.cursor.at[rows].set(start, mode="drop"),
+        pos=state.pos.at[rows].set(start, mode="drop"),
+        tok=state.tok.at[rows].set(0, mode="drop"),
+        done=state.done.at[rows].set(False, mode="drop"),
+        rem=state.rem.at[rows].set(gens, mode="drop"),
+        keys=state.keys.at[rows].set(req_keys, mode="drop"))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
+                req_keys):
+    """Stall-mode admission state write, after the stop-the-world prefill
+    sampled ``tok0``: the slot enters directly in the decode phase
+    (``cursor == plen``)."""
+    rows = admit_rows(state, slot_ids)
+    return dataclasses.replace(
+        state,
+        tok=state.tok.at[rows].set(tok0, mode="drop"),
+        pos=state.pos.at[rows].set(lengths, mode="drop"),
+        plen=state.plen.at[rows].set(lengths, mode="drop"),
+        cursor=state.cursor.at[rows].set(lengths, mode="drop"),
+        done=state.done.at[rows].set(new_done, mode="drop"),
+        rem=state.rem.at[rows].set(new_rem, mode="drop"),
+        keys=state.keys.at[rows].set(req_keys, mode="drop"))
 
 
 def advance_step_rows(logits, keys, temperature, done, rem, n, active, *,

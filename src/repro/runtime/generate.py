@@ -30,14 +30,20 @@ arrived prompts enter via **chunked prefill** (default): admission only
 enqueues token ids, the segments prefill them chunk-by-chunk straight
 into pool pages, interleaved with decode under a decode-maximal token
 budget. The stop-the-world PR-4 path survives as ``admission="stall"``.
-Throughput is sustained tok/s over the whole arrival trace (DESIGN.md
-§Paged KV + continuous-batching dataflow, §Chunked-prefill dataflow).
+``prefix_sharing=True`` adds copy-on-write KV prefix sharing: a host
+``PrefixIndex`` maps page-aligned prompt chunks to the physical pages
+already holding their bytes, admission adopts matching pages (+1
+refcount, zero prefill) and chunked prefill starts at the first unshared
+token. Throughput is sustained tok/s over the whole arrival trace
+(DESIGN.md §Paged KV + continuous-batching dataflow, §Chunked-prefill
+dataflow, §Prefix sharing + copy-on-write dataflow).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 
 import jax
@@ -335,10 +341,18 @@ class ServeResult:
     page_util: list                  # (step, fraction of pool pages held)
     prefill_stall_s: float = 0.0     # wall spent in stop-the-world prefill
                                      # dispatches (0 under chunked admission)
+    prefill_tokens: int = 0          # prompt tokens actually prefilled
+    shared_prefix_tokens: int = 0    # prompt tokens skipped via adoption
+    prefix_hits: int = 0             # admissions that adopted >= 1 page
 
     @property
     def total_tokens(self) -> int:
         return sum(int(np.asarray(c.tokens).size) for c in self.completed)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of completed requests admitted with a shared prefix."""
+        return self.prefix_hits / max(len(self.completed), 1)
 
     @property
     def tok_s(self) -> float:
@@ -390,47 +404,87 @@ def _release_slots(caches, finished):
     return jax.tree.map(rel, caches, is_leaf=_is_kv_state)
 
 
-def _admit_rows(state, slot_ids):
-    """OOB-drop row indices for a fixed-width admission batch (padding
-    rows carry slot_id -1 and drop out of every scatter)."""
-    return jnp.where(slot_ids >= 0, slot_ids, state.done.shape[0])
+def _admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
+                   shared=None):
+    """Chunked admission state write — lives in ``launch.steps`` next to
+    ``ServeSlotState``; kept callable from here for the serve loop and
+    its tests."""
+    from repro.launch.steps import admit_chunked
+    return admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
+                         shared)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys):
-    """Chunked admission is *only* this state write (plus the host's page
-    reservation): enqueue the prompt token ids and arm the slot's phase
-    state — the segments prefill chunk-by-chunk, page-native. No prompt
-    forward, no ring scratch, no bytes-copy."""
-    rows = _admit_rows(state, slot_ids)
-    return dataclasses.replace(
-        state,
-        prompt_buf=state.prompt_buf.at[rows].set(prompts, mode="drop"),
-        plen=state.plen.at[rows].set(lengths, mode="drop"),
-        cursor=state.cursor.at[rows].set(0, mode="drop"),
-        pos=state.pos.at[rows].set(0, mode="drop"),
-        tok=state.tok.at[rows].set(0, mode="drop"),
-        done=state.done.at[rows].set(False, mode="drop"),
-        rem=state.rem.at[rows].set(gens, mode="drop"),
-        keys=state.keys.at[rows].set(req_keys, mode="drop"))
-
-
-@functools.partial(jax.jit, donate_argnums=(0,))
 def _admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
                  req_keys):
-    """Stall-mode admission state write, after the stop-the-world prefill
-    sampled ``tok0``: the slot enters directly in the decode phase
-    (``cursor == plen``)."""
-    rows = _admit_rows(state, slot_ids)
-    return dataclasses.replace(
-        state,
-        tok=state.tok.at[rows].set(tok0, mode="drop"),
-        pos=state.pos.at[rows].set(lengths, mode="drop"),
-        plen=state.plen.at[rows].set(lengths, mode="drop"),
-        cursor=state.cursor.at[rows].set(lengths, mode="drop"),
-        done=state.done.at[rows].set(new_done, mode="drop"),
-        rem=state.rem.at[rows].set(new_rem, mode="drop"),
-        keys=state.keys.at[rows].set(req_keys, mode="drop"))
+    from repro.launch.steps import admit_stall
+    return admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
+                       req_keys)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _adopt_prefix_slots(caches, slot_ids, pages, n_pages, n_tokens):
+    """Point freshly admitted slots' leading page-table entries at the
+    shared prefix pages (every layer's pool — the allocators run in
+    lockstep, so one page id is valid for all of them). Rows with
+    ``slot_ids[i] < 0`` or ``n_pages[i] == 0`` are no-ops."""
+    from repro.attention import PagedKVState
+
+    def one(node):
+        if isinstance(node, PagedKVState):
+            return jax.vmap(lambda p: p.adopt_prefix(slot_ids, pages,
+                                                     n_pages, n_tokens))(node)
+        return node
+
+    return jax.tree.map(one, caches, is_leaf=_is_kv_state)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pin_pages(caches, pages):
+    """+1 refcount on ``pages`` (flat, -1 padded) in every layer's pool —
+    the prefix index's registration pin."""
+    from repro.attention import PagedKVState
+
+    def one(node):
+        if isinstance(node, PagedKVState):
+            return jax.vmap(lambda p: p.incref_pages(pages))(node)
+        return node
+
+    return jax.tree.map(one, caches, is_leaf=_is_kv_state)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _unpin_pages(caches, pages):
+    """Drop the index pin on ``pages`` (flat, -1 padded); pages reaching
+    refcount zero return to every layer's free stack."""
+    from repro.attention import PagedKVState
+
+    def one(node):
+        if isinstance(node, PagedKVState):
+            return jax.vmap(lambda p: p.decref_pages(pages))(node)
+        return node
+
+    return jax.tree.map(one, caches, is_leaf=_is_kv_state)
+
+
+def _check_paged_invariants(caches, pins=None):
+    """Debug-mode host check: run ``PagedKVState.check_invariants`` on
+    every layer of every paged pool in the cache tree (``pins``: the
+    host-side {page: count} pin ledger). Slow — device_get of the full
+    bookkeeping state — gated behind ``debug_invariants`` / the
+    ``ITA_PAGED_DEBUG`` env var in ``serve_continuous``."""
+    import dataclasses as dc
+
+    from repro.attention import PagedKVState
+    for node in jax.tree.leaves(caches, is_leaf=_is_kv_state):
+        if not isinstance(node, PagedKVState):
+            continue
+        layers = node.k.shape[0]
+        for i in range(layers):
+            layer = PagedKVState(**{
+                f.name: (None if getattr(node, f.name) is None
+                         else getattr(node, f.name)[i])
+                for f in dc.fields(node)})
+            layer.check_invariants(pins=pins)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -499,6 +553,8 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                      eos_id: int | None = None, pad_id: int = 0,
                      admission: str = "chunked", chunk_size: int = 32,
                      token_budget: int | None = None,
+                     prefix_sharing: bool = False,
+                     debug_invariants: bool | None = None,
                      audit=None) -> ServeResult:
     """Serve an arrival trace with continuous batching over a paged pool.
 
@@ -533,7 +589,32 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     front, so the on-device allocator can never be overdrawn mid-segment
     — the invariant ``tests/test_paged.py`` property-checks. ``audit``
     (testing hook) is called after every admission round with the live
-    cache pytree and the slot→request map.
+    cache pytree, the slot→request map and the host pin ledger.
+
+    ``prefix_sharing=True`` (chunked admission only) shares identical
+    prompt prefixes across requests through the paged pool: as prompts
+    prefill, every *full* page of prompt tokens is registered in a host
+    ``PrefixIndex`` (chain hash of page-aligned token chunks → physical
+    page) and pinned (+1 refcount) so it outlives its request; a later
+    admission whose prompt walks the same chain *adopts* those pages
+    (``PagedKVState.adopt_prefix``) instead of reserving and prefilling
+    them — near-zero prefill cost for the shared tokens and a smaller
+    reservation, so more concurrent requests fit the same arena. At
+    least one prompt token always prefills (the sampled first token
+    needs live logits), and only requests that cannot wrap their window
+    (``len + gen <= capacity``) share or donate, so adopted pages are
+    never overwritten in serving — copy-on-write in the append paths
+    still guards the general case at the state level. Under page
+    pressure the index evicts idle pinned pages (LRU, active adopters
+    protected) before stalling the head of the queue. Bit-exactness:
+    a page's K/V bytes are a pure function of its tokens and
+    page-aligned position, and chunk boundaries don't change the fused
+    kernels' arithmetic, so shared-path tokens are bit-identical to the
+    unshared path (same conditions as chunked ≡ solo parity:
+    ``page_size`` = fused ``block_kv`` 128 + fused-family prefill).
+    ``debug_invariants`` (or env ``ITA_PAGED_DEBUG=1``) host-checks the
+    allocator partition + refcount invariants after every admission
+    round.
 
     Requests decode greedily (or with temperature sampling when ``key``
     is given) until ``gen`` tokens or ``eos_id``. Greedy serving is
@@ -571,6 +652,27 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     pool_pages = geo.k.shape[1] - 1                # minus parking
     pages_per_seq = geo.page_table.shape[2]
     capacity = pages_per_seq * page_size
+
+    index = None
+    if prefix_sharing:
+        from repro.attention import PagedKVState, PrefixIndex
+        if admission != "chunked":
+            raise ValueError(
+                "prefix_sharing requires admission='chunked' (stall-mode "
+                "prefill bypasses the page-native write path)")
+        geos = {(n.k.shape[1], n.k.shape[2], n.page_table.shape[2])
+                for n in jax.tree.leaves(caches, is_leaf=_is_kv_state)
+                if isinstance(n, PagedKVState)}
+        if len(geos) > 1:
+            raise ValueError(
+                f"prefix_sharing needs one uniform pool geometry across "
+                f"all attention layers (one physical page id must mean "
+                f"the same logical page everywhere), got {sorted(geos)} — "
+                f"window-capped layer groups (local/swa mixed with full "
+                f"attention) break the layer-lockstep guarantee")
+        index = PrefixIndex(page_size)
+    debug = debug_invariants if debug_invariants is not None \
+        else bool(os.environ.get("ITA_PAGED_DEBUG"))
     chunk = max(1, min(chunk_size, capacity))
     budget = token_budget if token_budget is not None \
         else slots - 1 + chunk
@@ -627,6 +729,15 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     completed = []
     page_util = []
 
+    # prefix-sharing host state (all empty/zero when index is None)
+    pins = {}                                      # page -> 1 (index pins)
+    slot_shared = [[] for _ in range(slots)]       # adopted pages per slot
+    slot_shareable = [False] * slots               # row may donate pages
+    reg_done = [0] * slots                         # prompt pages registered
+    prefill_tokens = 0
+    shared_tokens = 0
+    prefix_hits = 0
+
     state = ServeSlotState.init(slots, prompt_pad, base_key)
 
     step = 0
@@ -646,6 +757,9 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         slot_req[slot] = None
         reserved[slot] = 0
         prefilling[slot] = False
+        slot_shared[slot] = []
+        slot_shareable[slot] = False
+        reg_done[slot] = 0
 
     to_release = []                                # slots freed, pages held
 
@@ -655,13 +769,39 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             if requests[i].arrival <= step:
                 arrived_wall.setdefault(i, now_s)
         # -- admission: arrived requests into free, page-backed slots ----
+        # budget: reservations + index pins both count against the pool.
+        # A pinned page inside an active donor's reservation is counted
+        # twice — conservative, never overdrawn; the win comes from
+        # adopters reserving `need - shared` pages.
         free_slots = [s for s in range(slots) if slot_req[s] is None]
-        page_budget = pool_pages - sum(reserved)
+        page_budget = pool_pages - sum(reserved) - len(pins)
         adm = []
+        adm_shared = {}                            # slot -> adopted pages
+        evict_batch = []
         for i in list(queue):
             if not free_slots or requests[i].arrival > step:
                 break
-            need = pages_for(requests[i])
+            req = requests[i]
+            plen_i = int(np.asarray(req.prompt).size)
+            sh_pages = []
+            if index is not None and plen_i + req.gen <= capacity:
+                # cap at plen-1: >= 1 prompt token must prefill live (the
+                # first sampled token needs this request's last-position
+                # logits); no sharing for window-wrapping requests (their
+                # COW pops would need headroom the reservation lacks)
+                sh_pages = index.lookup(req.prompt, max_tokens=plen_i - 1)
+            need = pages_for(req) - len(sh_pages)
+            if need > page_budget and index is not None and len(index):
+                # evict idle pinned prefixes (LRU) before stalling the
+                # head of the queue; pages adopted by active slots (or
+                # about to be, by this request) keep their pin
+                protected = {p for lst in slot_shared for p in lst}
+                protected |= set(sh_pages)
+                evicted = index.evict_lru(need - page_budget, protected)
+                for p in evicted:
+                    pins.pop(p, None)
+                evict_batch.extend(evicted)
+                page_budget += len(evicted)
             if need > page_budget:
                 break                              # head-of-line: keep order
             slot = free_slots.pop(0)
@@ -671,6 +811,15 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             page_budget -= need
             admitted_step[i] = step
             adm.append((slot, i))
+            adm_shared[slot] = sh_pages
+            slot_shared[slot] = list(sh_pages)
+            slot_shareable[slot] = (index is not None
+                                    and plen_i + req.gen <= capacity)
+            reg_done[slot] = len(sh_pages)         # adopted = already indexed
+            sh_toks = len(sh_pages) * page_size
+            prefill_tokens += plen_i - sh_toks
+            shared_tokens += sh_toks
+            prefix_hits += bool(sh_pages)
         if adm and to_release:
             # deferred page hand-back: freed slots accumulate across
             # segment boundaries and release in one dispatch right before
@@ -680,6 +829,14 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             mask[to_release] = True
             caches = _release_slots(caches, jnp.asarray(mask))
             to_release = []
+        if evict_batch:
+            # unpin evicted index entries (dispatched even when the head
+            # still didn't fit, so the host pin ledger and the device
+            # refcounts never diverge); pages reaching refcount zero are
+            # free the moment this lands
+            pad = np.full((slots * pages_per_seq,), -1, np.int32)
+            pad[:len(evict_batch)] = evict_batch
+            caches = _unpin_pages(caches, jnp.asarray(pad))
         if adm:
             rounds += 1
             prompts = np.zeros((slots, prompt_pad), np.int32)
@@ -699,17 +856,36 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             lengths_d = jnp.asarray(lengths)
             slot_ids_d = jnp.asarray(slot_ids)
             if admission == "chunked":
+                shared_rows = np.zeros((slots,), np.int32)
+                if index is not None:
+                    adopt_pages = np.zeros((slots, pages_per_seq), np.int32)
+                    adopt_n = np.zeros((slots,), np.int32)
+                    for row, (slot, i) in enumerate(adm):
+                        sh = adm_shared.get(slot, [])
+                        adopt_pages[row, :len(sh)] = sh
+                        adopt_n[row] = len(sh)
+                        shared_rows[row] = len(sh) * page_size
+                    if adopt_n.any():
+                        # point the new slots' leading table entries at
+                        # the shared pages (+1 refcount, every layer)
+                        caches = _adopt_prefix_slots(
+                            caches, slot_ids_d, jnp.asarray(adopt_pages),
+                            jnp.asarray(adopt_n),
+                            jnp.asarray(shared_rows))
                 # enqueue-only admission: prompt ids + phase state; the
-                # segments do the prefill, page-native
+                # segments do the prefill, page-native, starting at the
+                # first unshared token
                 state = _admit_chunked(state, slot_ids_d,
                                        jnp.asarray(prompts), lengths_d,
-                                       jnp.asarray(gens), req_keys)
-                for slot, i in adm:
+                                       jnp.asarray(gens), req_keys,
+                                       jnp.asarray(shared_rows))
+                for row, (slot, i) in enumerate(adm):
                     prefilling[slot] = True
-                    cursor_host[slot] = 0
+                    cursor_host[slot] = int(shared_rows[row])
             else:
                 # stall admission: stop-the-world ragged prefill over the
-                # ring scratch, bytes-copied into pool pages
+                # ring scratch, bytes-copied into pool pages (no sharing:
+                # every prompt token forwards)
                 t_stall = time.perf_counter()
                 logits, scratch = prefill(params, jnp.asarray(prompts),
                                           scratch, None, lengths_d)
@@ -735,7 +911,9 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                 jax.block_until_ready(state.tok)
                 stall_s += time.perf_counter() - t_stall
             if audit is not None:
-                audit(caches, list(slot_req))
+                audit(caches, list(slot_req), dict(pins))
+            if debug:
+                _check_paged_invariants(caches, pins=dict(pins))
         if admission == "stall" and adm:
             # freshly admitted gen-1/EOS requests finish without decoding
             just_done = np.asarray(state.done)
@@ -792,13 +970,46 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                 emitted[i].extend(row)
             cursor_host[s] = int(cursor_np[s])
             prefilling[s] = cursor_host[s] < plen_host[s]
+        if index is not None:
+            # register every freshly completed *full* page of prompt
+            # tokens (bytes final: no-wrap donors never rewrite them) so
+            # later arrivals can adopt it; runs before the finish/release
+            # bookkeeping so a request that just completed still donates.
+            # One small device_get of layer 0's page tables serves every
+            # layer — the pools are in lockstep.
+            reg_rows = []
+            for s in range(slots):
+                if slot_req[s] is None or not slot_shareable[s]:
+                    continue
+                full = min(cursor_host[s], plen_host[s]) // page_size
+                if full > reg_done[s]:
+                    reg_rows.append((s, full))
+            if reg_rows:
+                table = np.asarray(jax.device_get(
+                    _first_paged(caches).page_table[0]))
+                new_pins = []
+                for s, full in reg_rows:
+                    got = index.register(requests[slot_req[s]].prompt,
+                                         table[s, :full])
+                    reg_done[s] = full
+                    new_pins.extend(got)
+                if new_pins:
+                    pins.update((p, 1) for p in new_pins)
+                    pad = np.full((slots * pages_per_seq,), -1, np.int32)
+                    pad[:len(new_pins)] = new_pins
+                    caches = _pin_pages(caches, jnp.asarray(pad))
         fin = [s for s in range(slots)
                if slot_req[s] is not None and done_np[s]]
         for s in fin:
             finish(s, now_s)
         to_release.extend(fin)
 
+    if debug:
+        _check_paged_invariants(caches, pins=dict(pins))
     wall = time.perf_counter() - t0
     return ServeResult(completed=completed, wall_s=wall, steps=step,
                        segments=segments, admission_rounds=rounds,
-                       page_util=page_util, prefill_stall_s=stall_s)
+                       page_util=page_util, prefill_stall_s=stall_s,
+                       prefill_tokens=prefill_tokens,
+                       shared_prefix_tokens=shared_tokens,
+                       prefix_hits=prefix_hits)

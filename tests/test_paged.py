@@ -168,21 +168,28 @@ def test_paged_state_matches_ring_through_wrap():
                 err_msg=f"row {row} token {t}")
 
 
-def _partition_ok(p: PagedKVState):
-    """Invariant: {parking} ∪ free stack ∪ held pages partition the
-    arena — no double-booking, no leaks."""
+def _partition_ok(p: PagedKVState, pins=None, shared=False):
+    """Invariant: {parking} ∪ free stack ∪ referenced pages partition the
+    arena — no double-booking, no leaks — and every page's refcount
+    equals its table references plus pins (``check_invariants``). With
+    ``shared=False`` additionally requires exclusively-held pages (no
+    page in two rows), the pre-sharing partition property."""
     pt = np.asarray(p.page_table)
     held_counts = np.asarray(p.pages_held())
     held = []
     for row in range(p.batch):
         held.extend(pt[row, :held_counts[row]].tolist())
     free = np.asarray(p.free_stack)[:int(p.free_top)].tolist()
-    if len(set(held)) != len(held):                # a page in two rows
+    try:
+        p.check_invariants(pins=pins)
+    except AssertionError:
         return False
-    if set(held) & set(free):                      # held page marked free
+    if not shared and len(set(held)) != len(held):  # a page in two rows
         return False
     if 0 in held or 0 in free:                     # parking page leaked
         return False
+    if pins:
+        held.extend(pg for pg, c in pins.items() for _ in range(c))
     return set(held) | set(free) | {0} == set(range(p.num_pages))
 
 
@@ -216,15 +223,17 @@ def test_page_free_and_realloc_reuse():
 
 def test_allocator_partition_property_seeded():
     """Seeded property test: a random interleaving of admissions (into
-    released rows), appends (with random live masks) and releases never
-    double-books a page — the partition invariant holds at every step."""
+    released rows), appends (with random live masks) and releases —
+    including repeated and overlapping release masks — never
+    double-books a page: the partition + refcount invariant holds at
+    every step and re-releasing a released row moves nothing."""
     b, g, hd, page, cap = 4, 1, 4, 4, 16
     prng = np.random.default_rng(7)
     p = PagedKVState.init(b, cap, g, hd, page_size=page,
                           num_pages=b * (cap // page) + 1)
     active = np.zeros(b, bool)
     for op in range(120):
-        kind = prng.integers(0, 3)
+        kind = prng.integers(0, 4)
         if kind == 0:                              # admit into a free row
             free = np.flatnonzero(~active)
             if free.size:
@@ -245,6 +254,19 @@ def test_allocator_partition_property_seeded():
             if fin.any():
                 p = p.release(jnp.asarray(fin))
                 active &= ~fin
+        elif kind == 3 and active.any():           # repeated + overlapping
+            fin = active & (prng.random(b) < 0.4)
+            if fin.any():
+                p = p.release(jnp.asarray(fin))
+                active &= ~fin
+                top_before = int(p.free_top)
+                # same mask again, then a superset that only adds rows
+                # already released / never admitted: both no-ops
+                p = p.release(jnp.asarray(fin))
+                over = fin | (~active & (prng.random(b) < 0.5))
+                p = p.release(jnp.asarray(over))
+                assert int(p.free_top) == top_before, \
+                    f"op {op}: double release pushed pages again"
         assert not bool(p.oversubscribed()), f"op {op}: pool overdrawn"
         assert _partition_ok(p), f"op {op}: partition violated"
 
@@ -276,7 +298,7 @@ def test_burst_and_overlong_append_match_ring():
 def test_paged_state_is_pytree_and_jit_safe():
     p = PagedKVState.init(2, 16, 2, 4, page_size=8, per_head_scales=True)
     leaves = jax.tree.leaves(p)
-    assert len(leaves) == 8
+    assert len(leaves) == 9                        # + ref_count
     shp = jax.eval_shape(lambda: PagedKVState.init(2, 16, 2, 4, page_size=8))
     assert isinstance(shp, PagedKVState) and shp.k_scale is None
 
@@ -288,6 +310,273 @@ def test_paged_state_is_pytree_and_jit_safe():
     assert isinstance(out, PagedKVState)
     np.testing.assert_array_equal(np.asarray(out.pos), [1, 1])
     np.testing.assert_array_equal(np.asarray(out.pages_held()), [1, 1])
+
+
+# ---------------------------------------------------------------------------
+# Allocator bugfixes: scatter determinism + parking-page hygiene (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def _state_equal(a: PagedKVState, b: PagedKVState, msg=""):
+    for f in ("k", "v", "page_table", "pos", "free_stack", "free_top",
+              "ref_count"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg}{f}")
+
+
+def test_allocator_ops_bit_deterministic_under_jit():
+    """The duplicate-scatter regression: ragged prefill, an
+    over-capacity burst ``decode_append`` under a live mask, a ragged
+    ``append_chunk`` and a double ``release`` produce **bit-identical**
+    state eager vs jit vs a second jit run. Masked/pad writes scatter to
+    an out-of-bounds index and are dropped — with no duplicate targets
+    (the old parking-page sink), nothing depends on an unspecified
+    duplicate-scatter winner, and the parking page's bytes stay zero."""
+    b, g, hd, page, cap = 3, 2, 4, 8, 16
+    prng = np.random.default_rng(13)
+    pre = prng.integers(-128, 128, (b, 10, g, hd)).astype(np.int8)
+    burst = prng.integers(-128, 128, (b, cap + 5, g, hd)).astype(np.int8)
+    chunk = prng.integers(-128, 128, (b, 6, g, hd)).astype(np.int8)
+    lens = jnp.asarray([10, 4, 0], jnp.int32)
+    live = jnp.asarray([True, False, True])
+    n_new = jnp.asarray([2, 6, 0], jnp.int32)
+
+    def run(p, k_pre, k_burst, k_chunk):
+        p = p.write_prompts(k_pre, k_pre, lengths=lens)
+        p = p.decode_append(k_burst, k_burst, live=live)   # > capacity
+        p = p.append_chunk(k_chunk, k_chunk, n_new)
+        p = p.release(jnp.asarray([True, False, False]))
+        p = p.release(jnp.asarray([True, True, False]))    # overlapping
+        return p
+
+    def init():
+        return PagedKVState.init(b, cap, g, hd, page_size=page)
+
+    args = (jnp.asarray(pre), jnp.asarray(burst), jnp.asarray(chunk))
+    eager = run(init(), *args)
+    jitted = jax.jit(run)
+    j1 = jitted(init(), *args)
+    j2 = jitted(init(), *args)
+    _state_equal(eager, j1, "eager vs jit: ")
+    _state_equal(j1, j2, "jit run 1 vs 2: ")
+    assert not np.asarray(j1.k[0]).any() and not np.asarray(j1.v[0]).any(), \
+        "parking page bytes were written"
+    assert _partition_ok(j1)
+
+
+def test_write_prompts_dummy_rows_keep_parking_pristine():
+    """Fixed-width admission dispatch: negative ``slots`` entries are
+    dummy rows whose bytes must go *nowhere* — no page allocated, no
+    byte written (the parking page stays all-zero), untargeted rows
+    untouched — and no live row's table ever points at page 0."""
+    b, g, hd, page, cap = 3, 2, 4, 8, 16
+    p = PagedKVState.init(b, cap, g, hd, page_size=page)
+    a = _i8(2, 12, g, hd)
+    p = p.write_prompts(jnp.asarray(a), jnp.asarray(a),
+                        lengths=jnp.asarray([12, 7]),
+                        slots=jnp.asarray([0, 2]))
+    snap_k = np.asarray(p.k).copy()
+    dummy = _i8(2, 12, g, hd)
+    p2 = p.write_prompts(jnp.asarray(dummy), jnp.asarray(dummy),
+                         lengths=jnp.asarray([12, 9]),
+                         slots=jnp.asarray([-1, -1]))
+    np.testing.assert_array_equal(np.asarray(p2.k), snap_k,
+                                  err_msg="dummy admission wrote bytes")
+    np.testing.assert_array_equal(np.asarray(p2.pos), np.asarray(p.pos))
+    assert int(p2.free_top) == int(p.free_top), "dummy row leaked a page"
+    assert not np.asarray(p2.k[0]).any(), "parking page written"
+    p2.check_invariants()
+    pt = np.asarray(p2.page_table)
+    held = np.asarray(p2.pages_held())
+    for row in range(b):
+        assert 0 not in pt[row, :held[row]].tolist(), \
+            f"live row {row} points at the parking page"
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: adopt_prefix + copy-on-write (state level, ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def test_append_chunk_straddling_pages_during_neighbor_cow():
+    """One ragged ``append_chunk`` whose row-0 chunk straddles three page
+    boundaries and wraps onto its *shared* prefix pages, while the
+    neighbor row copy-on-writes the same shared pages in the same call:
+    logical bytes match (a) the identical tokens applied as sequential
+    masked ``decode_append`` steps and (b) an unshared pool fed each
+    row's full stream — and a shared page abandoned by *both* diverging
+    rows at once returns to the free stack exactly once."""
+    b, g, hd, page, npps = 2, 2, 4, 4, 4
+    cap = page * npps                              # 16
+    prng = np.random.default_rng(21)
+    P = 2 * npps + 3                               # COW pop headroom
+
+    def mk():
+        return PagedKVState.init(b, cap, g, hd, page_size=page,
+                                 num_pages=P)
+
+    pre = prng.integers(-128, 128, (1, 8, g, hd)).astype(np.int8)
+    shared = mk().write_prompts(jnp.asarray(pre), jnp.asarray(pre),
+                                lengths=jnp.asarray([8]),
+                                slots=jnp.asarray([0]))
+    donor_pages = np.asarray(shared.page_table)[0, :2]
+    shared = shared.adopt_prefix(jnp.asarray([1]),
+                                 jnp.asarray(donor_pages[None, :]),
+                                 jnp.asarray([2]), jnp.asarray([8]))
+    np.testing.assert_array_equal(
+        np.asarray(shared.ref_count)[donor_pages], [2, 2])
+    assert _partition_ok(shared, shared=True)
+
+    s = 13
+    toks = prng.integers(-128, 128, (b, s, g, hd)).astype(np.int8)
+    n_new = np.asarray([13, 9], np.int32)
+    # row 0: slots 8..20 -> page boundaries at 12, 16 (the wrap) and 20,
+    # landing on shared logical pages 0 and 1 -> COW both; row 1: slots
+    # 8..16 -> COWs shared logical page 0 in the same dispatch. Both rows
+    # abandon the donor copy of logical page 0 simultaneously.
+    chunked = shared.append_chunk(jnp.asarray(toks), jnp.asarray(toks),
+                                  jnp.asarray(n_new))
+    assert _partition_ok(chunked)                  # fully diverged again
+
+    # (a) sequential masked single-token appends from the same shared state
+    ref = shared
+    for t in range(s):
+        ref = ref.decode_append(jnp.asarray(toks[:, t:t + 1]),
+                                jnp.asarray(toks[:, t:t + 1]),
+                                live=jnp.asarray(t < n_new))
+    np.testing.assert_array_equal(np.asarray(chunked.pos),
+                                  np.asarray(ref.pos))
+    np.testing.assert_array_equal(np.asarray(chunked.pages_held()),
+                                  np.asarray(ref.pages_held()))
+    assert int(chunked.free_top) == int(ref.free_top)
+
+    # (b) the unshared path: a fresh pool where each row owns its prefix
+    prompts = np.broadcast_to(pre, (b, 8, g, hd))
+    unshared = mk().write_prompts(jnp.asarray(prompts), jnp.asarray(prompts))
+    unshared = unshared.append_chunk(jnp.asarray(toks), jnp.asarray(toks),
+                                     jnp.asarray(n_new))
+    lv_c, lv_r, lv_u = (_logical_view(x) for x in (chunked, ref, unshared))
+    for row in range(b):
+        n = int(chunked.valid_len()[row])
+        pos = int(chunked.pos[row])
+        for t in range(pos - n, pos):
+            np.testing.assert_array_equal(
+                lv_c[row, t % cap], lv_r[row, t % cap],
+                err_msg=f"row {row} token {t}: chunked vs sequential")
+            np.testing.assert_array_equal(
+                lv_c[row, t % cap], lv_u[row, t % cap],
+                err_msg=f"row {row} token {t}: shared vs unshared")
+
+
+def test_shared_refcount_partition_property_seeded():
+    """Seeded property test over admit / adopt / pin / unpin / ragged
+    append (arming copy-on-write on wrap) / repeated-release cycles:
+    after every op each page is on the free stack XOR referenced, each
+    refcount equals its page-table references plus pins, the parking
+    page stays untouched, and a stray decref of an already-free page is
+    a guarded no-op."""
+    b, g, hd, page, npps = 3, 1, 4, 4, 3
+    cap = page * npps
+    max_pins = 4
+    P = b * npps + max_pins + 2
+    prng = np.random.default_rng(17)
+    p = PagedKVState.init(b, cap, g, hd, page_size=page, num_pages=P)
+    active = np.zeros(b, bool)
+    pins: dict = {}
+    for op in range(160):
+        kind = prng.integers(0, 6)
+        if kind == 0:                              # admit a fresh row
+            free = np.flatnonzero(~active)
+            if free.size:
+                row = int(prng.choice(free))
+                ln = int(prng.integers(1, cap + 1))
+                tok = _i8(1, ln, g, hd)
+                p = p.write_prompts(jnp.asarray(tok), jnp.asarray(tok),
+                                    lengths=jnp.asarray([ln]),
+                                    slots=jnp.asarray([row]))
+                active[row] = True
+        elif kind == 1:                            # adopt a donor's prefix
+            free = np.flatnonzero(~active)
+            donors = [r for r in np.flatnonzero(active)
+                      if int(np.asarray(p.pos)[r]) >= page]
+            if free.size and donors:
+                row = int(prng.choice(free))
+                donor = int(prng.choice(donors))
+                full = min(int(np.asarray(p.pos)[donor]) // page, npps)
+                n_pg = int(prng.integers(1, full + 1))
+                pages = np.asarray(p.page_table)[donor, :n_pg]
+                p = p.adopt_prefix(jnp.asarray([row]),
+                                   jnp.asarray(pages[None, :]),
+                                   jnp.asarray([n_pg]),
+                                   jnp.asarray([n_pg * page]))
+                active[row] = True
+        elif kind == 2 and active.any():           # ragged append, may COW
+            live = active & (prng.random(b) < 0.8)
+            width = int(prng.integers(1, page + 2))
+            n_new = np.where(live, prng.integers(0, width + 1, b),
+                             0).astype(np.int32)
+            tok = _i8(b, width, g, hd)
+            p = p.append_chunk(jnp.asarray(tok), jnp.asarray(tok),
+                               jnp.asarray(n_new))
+        elif kind == 3 and active.any():           # release, maybe twice
+            fin = active & (prng.random(b) < 0.4)
+            if fin.any():
+                p = p.release(jnp.asarray(fin))
+                active &= ~fin
+                if prng.random() < 0.5:
+                    p = p.release(jnp.asarray(fin))    # idempotent
+        elif kind == 4 and len(pins) < max_pins:   # pin a held page
+            cand: set = set()
+            pt = np.asarray(p.page_table)
+            held = np.asarray(p.pages_held())
+            for r in np.flatnonzero(active):
+                cand.update(pt[r, :held[r]].tolist())
+            cand -= set(pins)
+            if cand:
+                pg = int(prng.choice(sorted(cand)))
+                p = p.incref_pages(jnp.asarray([pg]))
+                pins[pg] = 1
+        elif kind == 5 and pins:                   # unpin (+ stray decref)
+            pg = int(prng.choice(sorted(pins)))
+            p = p.decref_pages(jnp.asarray([pg]))
+            del pins[pg]
+            if int(np.asarray(p.ref_count)[pg]) == 0 \
+                    and prng.random() < 0.5:
+                p = p.decref_pages(jnp.asarray([pg]))  # stray: guarded
+        assert not bool(p.oversubscribed()), f"op {op}: pool overdrawn"
+        try:
+            p.check_invariants(pins=pins)
+        except AssertionError as e:
+            raise AssertionError(f"op {op}: {e}") from e
+
+
+def test_prefix_index_lookup_register_evict():
+    """PrefixIndex host semantics: chain-hashed page-granular lookup
+    returns the longest registered prefix (partial pages never match),
+    registration skips known chunks and halts on conflicts or the
+    parking page, and LRU eviction respects the protected set while
+    orphaned chain tails stay evictable."""
+    from repro.attention import PrefixIndex
+    idx = PrefixIndex(page_size=4)
+    a = np.arange(12, dtype=np.int32)              # 3 full chunks
+    assert idx.register(a, [5, 6, 7]) == [5, 6, 7]
+    assert len(idx) == 3
+    assert idx.lookup(a) == [5, 6, 7]
+    assert idx.lookup(a[:11]) == [5, 6]            # partial page 3: no hit
+    assert idx.lookup(a, max_tokens=9) == [5, 6]   # cap binds
+    b2 = np.concatenate([a[:8], 90 + np.arange(4)]).astype(np.int32)
+    assert idx.lookup(b2) == [5, 6]                # diverges at chunk 2
+    c = np.concatenate([[99], a[1:]]).astype(np.int32)
+    assert idx.lookup(c) == []                     # position-0 mismatch
+    assert idx.register(a, [5, 6, 7]) == []        # all known: no new pins
+    assert idx.register(b2, [5, 6, 9]) == [9]      # only the new tail
+    assert idx.register(c, [0, 11]) == []          # parking page halts
+    idx.lookup(b2)                                 # LRU-touch 5, 6, 9
+    ev = idx.evict_lru(2, protected={7})
+    assert ev == [5, 6] and 7 not in ev
+    assert idx.lookup(b2) == []                    # chain head evicted
+    assert 9 in idx.pinned_pages                   # orphaned tail ...
+    assert sorted(idx.evict_lru(5)) == [7, 9]      # ... still evictable
+    assert len(idx) == 0 and idx.pinned_pages == []
 
 
 # ---------------------------------------------------------------------------

@@ -266,25 +266,27 @@ def test_mixed_scheduler_budget_and_progress(seed):
 # Scheduler safety: no page / slot double-booking (seeded property)
 # ---------------------------------------------------------------------------
 
-def _audit_partition(caches, slot_req):
-    """Every layer's pool: active slots' held pages are disjoint, never
-    the parking page, and disjoint from the free stack."""
+def _audit_partition(caches, slot_req, pins, shared=False):
+    """Every layer's pool satisfies the allocator invariant
+    (``check_invariants``): each page on the free stack XOR referenced,
+    each refcount equal to its page-table references plus index
+    ``pins``, parking page never held or free-listed. Without prefix
+    sharing additionally no page backs two slots, and no request ever
+    occupies two slots."""
     def check(node):
         if not isinstance(node, PagedKVState):
             return node
         for period in range(node.k.shape[0]):
             p = jax.tree.map(lambda a: a[period], node)
-            pt = np.asarray(p.page_table)
-            held_counts = np.asarray(p.pages_held())
-            held = []
-            for row in range(p.batch):
-                held.extend(pt[row, :held_counts[row]].tolist())
-            free = set(np.asarray(p.free_stack)[:int(p.free_top)].tolist())
-            assert len(set(held)) == len(held), \
-                f"page double-booked across slots: {held}"
-            assert 0 not in held, "parking page allocated to a sequence"
-            assert not (set(held) & free), "held page also on free stack"
-            assert int(p.free_top) >= 0, "pool overdrawn"
+            p.check_invariants(pins=pins)
+            if not shared:
+                pt = np.asarray(p.page_table)
+                held_counts = np.asarray(p.pages_held())
+                held = []
+                for row in range(p.batch):
+                    held.extend(pt[row, :held_counts[row]].tolist())
+                assert len(set(held)) == len(held), \
+                    f"page double-booked across slots: {held}"
         return node
 
     jax.tree.map(check, caches,
@@ -301,9 +303,9 @@ def test_scheduler_never_double_books_page_or_slot(seed, admission):
     reqs = _trace(8, prng, max_gen=7, spread=4)
     audits = []
 
-    def audit(caches, slot_req):
+    def audit(caches, slot_req, pins):
         audits.append(1)
-        _audit_partition(caches, slot_req)
+        _audit_partition(caches, slot_req, pins)
 
     # page_size 32 -> up to 4 pages per sequence, pool undersized to
     # 3 slots' worth + 1 so admission actually gates on pages
@@ -313,6 +315,109 @@ def test_scheduler_never_double_books_page_or_slot(seed, admission):
                            chunk_size=8, audit=audit)
     assert audits, "audit hook never ran"
     assert len(res.completed) == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: shared system prompts over the paged pool (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def test_prefix_sharing_bit_exact_and_saves_prefill():
+    """A common 128-token system prompt across the trace: serving with
+    prefix sharing on is token-for-token identical to sharing off and to
+    solo ``generate()``, while strictly reducing prefilled tokens —
+    shared-prefix chunks skip prefill and adopt the donor's pages. The
+    audit + debug invariant checks run with the live pin ledger."""
+    params = _params()
+    prng = np.random.default_rng(23)
+    sys_toks = prng.integers(0, CFG.vocab_size, 128).astype(np.int32)
+    reqs = []
+    for i in range(5):
+        tail = prng.integers(0, CFG.vocab_size,
+                             int(prng.integers(4, 20))).astype(np.int32)
+        reqs.append(ServeRequest(prompt=np.concatenate([sys_toks, tail]),
+                                 gen=int(prng.integers(3, 8)),
+                                 arrival=6 * i))
+    audits = []
+
+    def audit(caches, slot_req, pins):
+        audits.append(1)
+        _audit_partition(caches, slot_req, pins, shared=True)
+
+    kw = dict(slots=3, segment=4, max_len=256, page_size=128,
+              admission="chunked", chunk_size=48)
+    off = serve_continuous(params, CFG, reqs, **kw)
+    on = serve_continuous(params, CFG, reqs, prefix_sharing=True,
+                          debug_invariants=True, audit=audit, **kw)
+    assert audits, "audit hook never ran"
+    assert off.prefix_hits == 0 and off.shared_prefix_tokens == 0
+    assert on.prefix_hits >= 1 and on.shared_prefix_tokens >= 128
+    assert on.prefill_tokens < off.prefill_tokens, \
+        (on.prefill_tokens, off.prefill_tokens)
+    got_on = {c.index: np.asarray(c.tokens) for c in on.completed}
+    got_off = {c.index: np.asarray(c.tokens) for c in off.completed}
+    assert len(got_on) == len(got_off) == len(reqs)
+    for i, r in enumerate(reqs):
+        solo = generate(params, CFG, jnp.asarray(r.prompt)[None], r.gen,
+                        max_len=256)
+        want = np.asarray(solo.tokens)[0]
+        np.testing.assert_array_equal(got_off[i], want,
+                                      err_msg=f"sharing-off req {i}")
+        np.testing.assert_array_equal(got_on[i], want,
+                                      err_msg=f"sharing-on req {i}")
+
+
+def test_prefix_sharing_eviction_under_page_pressure():
+    """An undersized pool (room for two pinned prefix families) forces
+    the index to evict LRU pins when a third family arrives: every
+    request still completes bit-exactly against solo generation and
+    same-family followers still hit the index."""
+    params = _params()
+    prng = np.random.default_rng(29)
+    fams = [prng.integers(0, CFG.vocab_size, 128).astype(np.int32)
+            for _ in range(3)]
+    reqs = []
+    t = 0
+    for fam in fams:
+        for _ in range(2):
+            tail = prng.integers(0, CFG.vocab_size,
+                                 int(prng.integers(3, 10))).astype(np.int32)
+            reqs.append(ServeRequest(prompt=np.concatenate([fam, tail]),
+                                     gen=3, arrival=t))
+            t += 8
+    res = serve_continuous(params, CFG, reqs, slots=1, segment=4,
+                           max_len=256, page_size=128, num_pages=4,
+                           admission="chunked", chunk_size=48,
+                           prefix_sharing=True, debug_invariants=True)
+    assert len(res.completed) == len(reqs)
+    assert res.prefix_hits >= 3          # each family's second request
+    for c in res.completed:
+        r = reqs[c.index]
+        solo = generate(params, CFG, jnp.asarray(r.prompt)[None], r.gen,
+                        max_len=256)
+        np.testing.assert_array_equal(np.asarray(c.tokens),
+                                      np.asarray(solo.tokens)[0],
+                                      err_msg=f"req {c.index}")
+
+
+def test_prefix_sharing_rejects_incompatible_modes():
+    """Sharing requires chunked admission (stall's scratch-ring adopt
+    bypasses the index) and uniform paged geometry across layer groups
+    (the page-id-per-layer lockstep argument breaks when a window caps
+    one group's pool)."""
+    params = _params()
+    reqs = [ServeRequest(prompt=np.zeros(4, np.int32), gen=2)]
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        serve_continuous(params, CFG, reqs, slots=2, segment=4,
+                         max_len=MAX_LEN, admission="stall",
+                         prefix_sharing=True)
+    mixed = dataclasses.replace(
+        CFG, layer_groups=((("attn",), 1), (("swa",), 1)), window=128)
+    params_mixed = _params(mixed)
+    # max_len 256 = 2 pages for the full-attention group but the swa
+    # pool is capped at window 128 = 1 page: geometries diverge
+    with pytest.raises(ValueError, match="uniform"):
+        serve_continuous(params_mixed, mixed, reqs, slots=2, segment=4,
+                         max_len=256, prefix_sharing=True)
 
 
 def test_serve_small_pages_wide_scratch():
