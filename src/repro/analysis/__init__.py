@@ -1,0 +1,27 @@
+"""Static analysis for the quantized serving stack.
+
+- ``repro.analysis.ranges``: jaxpr-walking integer-interval abstract
+  interpreter (the no-overflow verifier).
+- ``repro.analysis.verify``: the backend x spec x geometry certification
+  matrix, seeded from the declared operand ranges in
+  ``repro.attention.spec``.
+- ``repro.analysis.lints``: jit-hygiene lints for the fused loops
+  (bounded recompilation, donation actually used).
+
+CLI: ``python -m repro.analysis`` (see ``--help``).
+"""
+
+from repro.analysis.intervals import Interval
+from repro.analysis.lints import run_lints
+from repro.analysis.ranges import AnalysisResult, analyze_jaxpr
+from repro.analysis.verify import build_matrix, run_case, run_verification
+
+__all__ = [
+    "AnalysisResult",
+    "Interval",
+    "analyze_jaxpr",
+    "build_matrix",
+    "run_case",
+    "run_lints",
+    "run_verification",
+]

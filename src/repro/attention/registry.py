@@ -18,11 +18,12 @@ share the algorithm but not the rounding schedule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Union
+from collections.abc import Callable
+from typing import Any
 
 from repro.attention.spec import AttentionSpec
 
-SupportsFn = Callable[[AttentionSpec], Union[bool, str]]
+SupportsFn = Callable[[AttentionSpec], bool | str]
 
 
 class BackendUnsupported(ValueError):
@@ -60,7 +61,7 @@ def all_backends() -> tuple[Backend, ...]:
     return tuple(_REGISTRY.values())
 
 
-def backend_reasons(spec: AttentionSpec) -> dict[str, Union[bool, str]]:
+def backend_reasons(spec: AttentionSpec) -> dict[str, bool | str]:
     """Every backend's verdict for ``spec``: ``True`` or the reason why
     not — the introspection surface behind ``list_backends``."""
     return {b.name: b.supports(spec) for b in _REGISTRY.values()}

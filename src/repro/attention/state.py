@@ -789,7 +789,7 @@ class PrefixIndex:
         page_ids = [int(p) for p in np.asarray(page_ids).reshape(-1)]
         new = []
         for key, page in zip(self._chain_keys(tokens, len(page_ids)),
-                             page_ids):
+                             page_ids, strict=True):
             if page == PARKING_PAGE:
                 break
             have = self._entries.get(key)

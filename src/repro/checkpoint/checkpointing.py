@@ -117,7 +117,7 @@ class Checkpointer:
         out = []
         shard_leaves = (jax.tree.leaves(shardings)
                         if shardings is not None else [None] * len(leaves))
-        for i, (tmpl, sh) in enumerate(zip(leaves, shard_leaves)):
+        for i, (tmpl, sh) in enumerate(zip(leaves, shard_leaves, strict=True)):
             arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
             if sh is not None:
                 out.append(jax.device_put(arr, sh))

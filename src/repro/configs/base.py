@@ -14,7 +14,6 @@ pairs, each scanned with ``lax.scan`` over stacked per-period parameters
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,7 +26,7 @@ class ModelConfig:
     head_dim: int
     d_ff: int
     vocab_size: int
-    layer_groups: Tuple[Tuple[Tuple[str, ...], int], ...]
+    layer_groups: tuple[tuple[tuple[str, ...], int], ...]
 
     mlp_type: str = "swiglu"          # swiglu|geglu|gelu|moe|rwkv
     norm_type: str = "rmsnorm"

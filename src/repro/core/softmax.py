@@ -96,6 +96,11 @@ def ita_softmax_int(x_q: jax.Array, mask: jax.Array | None = None,
     sigma = jnp.maximum(sigma, 1)
     sigma_inv = (jnp.int32(1) << _W_INV) // sigma              # DI
     p = jax.lax.shift_right_logical(sigma_inv, jnp.minimum(k, 31))  # EN
+    # Identity on every reachable value (a live row has sigma >= 256 >> k_i
+    # for each of its elements, so sigma_inv >> k_i <= 256; a fully masked
+    # row shifts by _MASK_K and gets 0) — stated structurally so the range
+    # verifier can bound the downstream p*V accumulator non-relationally.
+    p = jnp.minimum(p, _UNIT)
     return p, sigma, row_max
 
 
@@ -201,6 +206,10 @@ def ita_softmax_adaptive_int(x_q: jax.Array, mask: jax.Array | None = None,
     pre = jnp.maximum(e_r + B_BITS - 30, 0)
     sigma_inv = (jnp.int32(1) << jnp.minimum(e_r + B_BITS - pre, 30)) \
         // jax.lax.shift_right_logical(sigma, pre)
+    # Identity clamp: 2^e_r <= sigma forces the quotient into (128, 256],
+    # but that bound is relational — state it structurally for the range
+    # verifier (mirrors kernels/common.py::adaptive_inverse).
+    sigma_inv = jnp.minimum(sigma_inv, _UNIT)
     p = jax.lax.shift_right_logical(sigma_inv, jnp.minimum(k, 31))
     return p, e_r, row_max
 

@@ -10,8 +10,45 @@ import jax.numpy as jnp
 
 from repro.core.quant import SOFTMAX_SHIFT
 
-NEG_SENTINEL = -256          # below any int8 value; int32-overflow safe
-MASK_K = 31                  # shift that zeroes a masked element's term
+# --- Declared integer bounds of the ITA softmax pipeline -------------------
+# These are the named facts the jaxpr range verifier (``repro.analysis``)
+# consumes; every bound below is re-proven per kernel on every CI run, so
+# changing one without updating the kernels fails the analysis gate.
+#
+# NEG_SENTINEL: the masked-logit fill. One below INT8_MIN*2, so it is
+#   (a) strictly below any real requantized logit (int8 grid), and
+#   (b) small enough that ``new_max - x <= 127 - (-256) = 383`` keeps the
+#   DA shift argument ``k = 383 >> SOFTMAX_SHIFT = 11`` well inside
+#   [0, 31] *before* the explicit min(k, 31) clamp — the subtraction can
+#   never approach int32 overflow.
+NEG_SENTINEL = -256
+# MASK_K: shift applied to masked elements; 128 >> 31 == 0, so a masked
+#   element contributes exactly nothing to sigma. Also the largest legal
+#   int32 shift, which is why every DA shift amount is clamped to it.
+MASK_K = 31
+# U_MAX: the DA numerator ``u = 128 >> k`` is at most 128 (k == 0, the
+#   row max itself). A (bq, bkv) tile therefore adds at most
+#   ``2 * bkv * U_MAX`` to sigma per DA step.
+U_MAX = 128
+# SIGMA_INV_MAX: both DI variants produce a reciprocal in [0, 256]:
+#   paper:    2^16 // sigma with sigma >= 2*U_MAX = 256 once any element
+#             is live (the row max contributes u = 128, doubled), so
+#             2^16 // 256 = 256 = SIGMA_INV_MAX; an all-masked row has
+#             sigma == 0 -> max(sigma, 1) -> 65536, which the EN pass
+#             never uses (its p is multiplied by an all-zero mask) but
+#             *is* the true paper_inverse range — see PAPER_INV_MAX.
+#   adaptive: 2^(e_r+8) // sigma with 2^e_r <= sigma (e_r = floor(log2
+#             sigma)) gives a quotient in (128, 256]. The bound is
+#             *relational* (it needs 2^e_r <= sigma), which a
+#             non-relational interval analyzer cannot derive, so
+#             ``adaptive_inverse`` carries an identity ``clip(.., 0,
+#             SIGMA_INV_MAX)`` to make it structural.
+SIGMA_INV_MAX = 256
+# PAPER_INV_MAX: the raw paper DI range before the EN shift, reached only
+#   on all-masked rows (sigma clamped to 1): 2^16. The EN pass bound
+#   ``p = sigma_inv >> k <= PAPER_INV_MAX`` is what sizes the p*V int8
+#   accumulator: bkv * PAPER_INV_MAX * 127 < 2^31 holds for bkv <= 256.
+PAPER_INV_MAX = 1 << 16
 
 # Per-backend block-size defaults, chosen by the
 # ``benchmarks/bench_kernels.py --sweep`` grid (VMEM working set stays
@@ -131,15 +168,23 @@ def da_update(m_ref, sigma_ref, logits_i32: jax.Array, valid: jax.Array):
 def adaptive_inverse(sigma: jax.Array):
     """DI with per-row power-of-two scaling: returns (sigma_inv, e_r) with
     ``sigma_inv ~= 2^(e_r+8)/sigma`` in (128, 256] and ``e_r = floor(log2
-    sigma)``. With e_r pinned to 8 this reduces to the paper's 2^16/sigma."""
+    sigma)``. With e_r pinned to 8 this reduces to the paper's 2^16/sigma.
+
+    The final clip is an identity on every reachable value — ``2^e_r <=
+    sigma`` forces the quotient into (128, 256] — but the bound is
+    relational, so the clip is what lets the non-relational range
+    verifier prove ``sigma_inv <= SIGMA_INV_MAX`` structurally.
+    """
     sigma = jnp.maximum(sigma, 1)
     e_r = 31 - jax.lax.clz(sigma)
     pre = jnp.maximum(e_r + 8 - 30, 0)
     sigma_inv = (jnp.int32(1) << jnp.minimum(e_r + 8 - pre, 30)) \
         // jax.lax.shift_right_logical(sigma, pre)
-    return sigma_inv, e_r
+    return jnp.clip(sigma_inv, 0, SIGMA_INV_MAX), e_r
 
 
 def paper_inverse(sigma: jax.Array):
-    """DI exactly as in silicon: sigma_inv = 2^16 // sigma (16-bit)."""
-    return (jnp.int32(1) << 16) // jnp.maximum(sigma, 1)
+    """DI exactly as in silicon: sigma_inv = 2^16 // sigma (16-bit),
+    i.e. ``PAPER_INV_MAX // sigma`` — at most PAPER_INV_MAX (all-masked
+    row, sigma clamped to 1), at most SIGMA_INV_MAX on any live row."""
+    return jnp.int32(PAPER_INV_MAX) // jnp.maximum(sigma, 1)

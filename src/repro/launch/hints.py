@@ -82,7 +82,7 @@ def constrain(x, *roles):
         roles = tuple(r if r in ("batch", "seq") else None for r in roles)
         spec = []
         used_model = False
-        for dim, role in zip(x.shape, roles):
+        for dim, role in zip(x.shape, roles, strict=False):
             if role == "batch":
                 allax = _token_axes(mesh)
                 if dim % _size(mesh, allax) == 0:
@@ -100,7 +100,7 @@ def constrain(x, *roles):
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(mesh, P(*spec)))
     spec = []
-    for dim, role in zip(x.shape, roles):
+    for dim, role in zip(x.shape, roles, strict=False):
         if role is None:
             spec.append(None)
             continue

@@ -34,7 +34,7 @@ def _axis_size(mesh, axes):
 def _fit(spec, shape, mesh):
     """Drop axes that don't divide the corresponding dim."""
     out = []
-    for dim, ax in zip(shape, spec):
+    for dim, ax in zip(shape, spec, strict=False):
         out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0
                    else None)
     return tuple(out)

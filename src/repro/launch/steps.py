@@ -480,7 +480,7 @@ def make_serve_segment(cfg, *, segment: int, sample: bool,
         caches, state, n = carry
         toks, emits, grants = (
             jnp.concatenate(parts, axis=0) if len(outs) > 1 else parts[0]
-            for parts in zip(*outs))
+            for parts in zip(*outs, strict=True))
         return toks.T, emits.T, grants.T, state, caches, n
 
     return seg

@@ -93,7 +93,7 @@ def adamw_update(grads, opt_state: OptState, params, cfg: AdamWConfig):
     flat_w = (jax.tree.leaves(opt_state.master)
               if opt_state.master is not None else [None] * len(flat_p))
     out = [upd(p, g, m, v, w) for p, g, m, v, w in
-           zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+           zip(flat_p, flat_g, flat_m, flat_v, flat_w, strict=True)]
     new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
     new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
     new_v = jax.tree.unflatten(treedef, [o[2] for o in out])

@@ -40,7 +40,8 @@ def ef_compress(grads, ef_state):
 
     flat, treedef = jax.tree.flatten(grads)
     eflat = jax.tree.leaves(ef_state)
-    qs, scales, errs = zip(*[one(g, e) for g, e in zip(flat, eflat)])
+    qs, scales, errs = zip(*[one(g, e) for g, e in zip(flat, eflat, strict=True)],
+                             strict=True)
     return (jax.tree.unflatten(treedef, qs),
             jax.tree.unflatten(treedef, scales),
             jax.tree.unflatten(treedef, errs))

@@ -160,7 +160,7 @@ def _validate_caches(caches, cfg, batch: int, max_len: int):
             + (", paged=True" if paged is not None else "") +
             f") for {cfg.name!r} — pass the max_len the caches were "
             f"allocated with")
-    for e, (path, g) in zip(exp_leaves, got):
+    for e, (path, g) in zip(exp_leaves, got, strict=True):
         if e.shape != g.shape or e.dtype != g.dtype:
             field = jax.tree_util.keystr(path)
             raise ValueError(

@@ -66,7 +66,8 @@ def test_checkpoint_resume_bitwise_identical(tmp_path):
     p6 = run(6, "ck_straight")
     run(3, "ck_resume")             # writes ckpt at step 3
     p_resumed = run(6, "ck_resume", restore=True)
-    for a, b in zip(jax.tree.leaves(p6), jax.tree.leaves(p_resumed)):
+    for a, b in zip(jax.tree.leaves(p6), jax.tree.leaves(p_resumed),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -101,7 +102,7 @@ def test_elastic_restore_to_different_mesh(tmp_path):
     restored, meta = ck.restore({"params": params},
                                 shardings={"params": p_sh})
     for a, b in zip(jax.tree.leaves(params),
-                    jax.tree.leaves(restored["params"])):
+                    jax.tree.leaves(restored["params"]), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -30,7 +30,7 @@ def test_param_specs_divisibility():
 
         def check(leaf, sh):
             spec = sh.spec
-            for dim, ax in zip(leaf.shape, spec):
+            for dim, ax in zip(leaf.shape, spec, strict=False):
                 if ax is None:
                     continue
                 axes = (ax,) if isinstance(ax, str) else ax
