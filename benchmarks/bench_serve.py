@@ -33,13 +33,24 @@ per-batch max-gen; stall: decode frozen for every admission prefill;
 chunked: decode-maximal every step; prefix: shared pages never
 re-prefilled) is hardware-independent.
 
+- (ISSUE 8) **overload survival**: on a trace whose arrival rate exceeds
+  the service rate, with two SLO classes over a deliberately undersized
+  page pool, page-pressure preemption keeps the high class's p95
+  admission delay (the deterministic, virtual-time TTFT) bounded by the
+  configured SLO while every low-class request still completes (no
+  starvation) — at tokens bit-identical to serving the same trace on an
+  unpressured pool, with the allocator invariants host-checked after
+  every admission round.
+
 Writes ``BENCH_serve.json`` (env ``ITA_BENCH_OUT_SERVE`` overrides the
 path): per-mode sustained tok/s, p50/p95 request latency, p50/p95 TTFT,
-prefill-stall fraction, page-pool utilization and (v3) prefix-sharing
+prefill-stall fraction, page-pool utilization, (v3) prefix-sharing
 counters — ``prefix_hit_rate``, prefilled/adopted token counts,
-``prefill_tokens_saved`` — schema-checked on every run; the smoke run
-(CI, ``benchmarks/run.py --smoke``) asserts every ordering including
-the strict prefill-token reduction.
+``prefill_tokens_saved`` — and (v4) the overload section's preemption
+count and per-class admission delays — schema-checked on every run; the
+smoke run (CI, ``benchmarks/run.py --smoke``) asserts every ordering
+including the strict prefill-token reduction and the overload SLO
+bound.
 """
 
 import json
@@ -75,10 +86,22 @@ MAX_LEN = 256                   # per-slot window: 2 pages
 
 SYS_LEN = PAGE                  # shared system prompt: one full page
 
+# overload: every request spans 2 pages; the pool allocates 7, so at
+# most 3 requests hold pages concurrently across 4 slots — page-bound,
+# arrival-rate ~2/step vs service-rate well under 1/step. The SLO the
+# smoke gate enforces for the high class is 4 segments of admission
+# delay (virtual steps — deterministic, machine-independent).
+OVERLOAD_POOL = 8
+OVERLOAD_SLO_STEPS = 4 * SEGMENT
+
 SCHEMA_KEYS = {"schema_version", "config", "chunked", "stall", "static",
                "prefix", "prefix_off", "prefill_tokens_saved",
-               "speedup_chunked_vs_stall", "speedup_continuous_vs_static"}
+               "speedup_chunked_vs_stall", "speedup_continuous_vs_static",
+               "overload"}
 MODE_KEYS = {"tok_s", "wall_s", "tokens", "requests"}
+OVERLOAD_KEYS = MODE_KEYS | {"preemptions", "slo_steps", "hi_requests",
+                             "hi_p95_admit_delay_steps",
+                             "lo_p95_admit_delay_steps", "hi_p95_ttft_s"}
 SERVE_KEYS = MODE_KEYS | {"latency_p50_s", "latency_p95_s", "ttft_p50_s",
                           "ttft_p95_s", "prefill_stall_frac",
                           "page_util_peak", "page_util_mean",
@@ -132,6 +155,24 @@ def make_shared_trace(n_requests, rng):
     return reqs
 
 
+def make_overload_trace(n_requests, rng):
+    """Arrival rate > service rate with two SLO classes: every request
+    spans two pages (prompt 110-140 + gen 24-33 over 128-token pages),
+    arrivals land two per step, and every fourth request is high
+    priority. On the undersized OVERLOAD_POOL only ~3 requests hold
+    pages at once, so the high class can only meet its SLO by preempting
+    low-class victims — the trace make_trace's queue pressure never
+    creates because there every request fits one page."""
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(110, 141))
+        reqs.append(ServeRequest(
+            prompt=rng.integers(0, CFG.vocab_size, plen).astype(np.int32),
+            gen=int(rng.integers(24, 34)), arrival=i // 2,
+            priority=1 if i % 4 == 0 else 0))
+    return reqs
+
+
 def run_serve_once(params, reqs, admission, prefix_sharing=False):
     res = serve_continuous(params, CFG, reqs, slots=SLOTS, segment=SEGMENT,
                            max_len=MAX_LEN, page_size=PAGE,
@@ -165,6 +206,24 @@ def summarize_serve(best):
     }
 
 
+def summarize_overload(res):
+    cs = res.class_summary()
+    hi = cs.get(1, {})
+    lo = cs.get(0, {})
+    return {
+        "tok_s": round(res.tok_s, 3),
+        "wall_s": round(res.wall_s, 6),
+        "tokens": res.total_tokens,
+        "requests": len(res.completed),
+        "preemptions": res.preemptions,
+        "slo_steps": OVERLOAD_SLO_STEPS,
+        "hi_requests": hi.get("n", 0),
+        "hi_p95_admit_delay_steps": hi.get("p95_admit_delay_steps", 0),
+        "lo_p95_admit_delay_steps": lo.get("p95_admit_delay_steps", 0),
+        "hi_p95_ttft_s": round(hi.get("p95_ttft_s", 0.0), 6),
+    }
+
+
 def run_static_once(params, reqs):
     """Static ragged batching baseline on the same trace: requests in
     arrival order, batches of SLOTS, each batch generates to its longest
@@ -189,12 +248,22 @@ def run_static_once(params, reqs):
 
 def _validate_schema(payload):
     assert SCHEMA_KEYS <= set(payload), set(payload)
-    assert payload["schema_version"] == 3
+    assert payload["schema_version"] == 4
     for mode in ("chunked", "stall", "prefix", "prefix_off"):
         missing = SERVE_KEYS - set(payload[mode])
         assert not missing, f"{mode} missing {missing}"
         assert payload[mode]["tok_s"] > 0, payload[mode]
     assert payload["chunked"]["prefill_stall_frac"] == 0.0
+    # ISSUE 8: the overload trace preempts, bounds the high class's
+    # admission delay by the SLO, and starves nobody
+    over = payload["overload"]
+    missing = OVERLOAD_KEYS - set(over)
+    assert not missing, f"overload missing {missing}"
+    assert over["preemptions"] >= 1, over
+    assert over["hi_p95_admit_delay_steps"] <= over["slo_steps"], over
+    assert over["hi_p95_admit_delay_steps"] \
+        < over["lo_p95_admit_delay_steps"], over
+    assert over["requests"] == payload["config"]["overload_requests"], over
     # ISSUE 6: sharing strictly reduces prefilled tokens on the shared
     # trace, hits at least one prefix, and never inflates pool occupancy
     assert payload["prefix"]["prefill_tokens"] \
@@ -234,6 +303,25 @@ def main():
         np.testing.assert_array_equal(
             toks_on[i], toks_off[i],
             err_msg=f"prefix sharing changed request {i}'s tokens")
+
+    # (ISSUE 8) overload: two SLO classes over the undersized pool, with
+    # the allocator invariants host-checked after every admission round;
+    # tokens must match the same trace served on an unpressured pool
+    # (counters and admission delays are deterministic — one pass each)
+    over_reqs = make_overload_trace(10 if smoke else 12, rng)
+    over = serve_continuous(
+        params, CFG, over_reqs, slots=SLOTS, segment=SEGMENT,
+        max_len=MAX_LEN, page_size=PAGE, num_pages=OVERLOAD_POOL,
+        admission="chunked", chunk_size=CHUNK, preemption=True,
+        debug_invariants=True)
+    assert len(over.completed) == len(over_reqs), "overload starved"
+    calm = run_serve_once(params, over_reqs, "chunked")
+    toks_over = {c.index: np.asarray(c.tokens) for c in over.completed}
+    for c in calm.completed:
+        np.testing.assert_array_equal(
+            toks_over[c.index], np.asarray(c.tokens),
+            err_msg=f"preemption changed request {c.index}'s tokens")
+    overload = summarize_overload(over)
 
     # this container's noise comes in multi-second bursts, so the modes
     # are *interleaved* (every iteration runs all of them back to back)
@@ -295,6 +383,13 @@ def main():
           f"{prefix_off['prefill_tokens']}")
     print(f"serve/prefill_tokens_saved,0,{tokens_saved}")
     print(f"serve/prefix_page_util_peak,0,{prefix['page_util_peak']:.6g}")
+    print(f"serve/overload_preemptions,0,{overload['preemptions']}")
+    print(f"serve/overload_hi_admit_delay_p95_steps,0,"
+          f"{overload['hi_p95_admit_delay_steps']}")
+    print(f"serve/overload_lo_admit_delay_p95_steps,0,"
+          f"{overload['lo_p95_admit_delay_steps']}")
+    print(f"serve/overload_hi_ttft_p95_ms,0,"
+          f"{overload['hi_p95_ttft_s'] * 1e3:.6g}")
 
     # ISSUE 4 acceptance: continuous batching must sustain higher
     # aggregate tok/s than static ragged batching on the same trace
@@ -320,21 +415,36 @@ def main():
     assert prefix["page_util_peak"] <= prefix_off["page_util_peak"], (
         f"sharing raised peak page occupancy: "
         f"{prefix['page_util_peak']} > {prefix_off['page_util_peak']}")
+    # ISSUE 8 acceptance: preemption fired, the high class met its
+    # (virtual-step) SLO and beat the low class, nobody starved
+    assert overload["preemptions"] >= 1, "overload trace never preempted"
+    assert overload["hi_p95_admit_delay_steps"] <= OVERLOAD_SLO_STEPS, (
+        f"high-priority p95 admission delay "
+        f"{overload['hi_p95_admit_delay_steps']} steps blew the "
+        f"{OVERLOAD_SLO_STEPS}-step SLO under overload")
+    assert overload["hi_p95_admit_delay_steps"] \
+        < overload["lo_p95_admit_delay_steps"], (
+        f"priority classes did not separate: hi "
+        f"{overload['hi_p95_admit_delay_steps']} vs lo "
+        f"{overload['lo_p95_admit_delay_steps']} admission-delay steps")
 
     payload = {
-        "schema_version": 3,
+        "schema_version": 4,
         "config": {"arch": CFG.name, "slots": SLOTS, "segment": SEGMENT,
                    "page_size": PAGE, "max_len": MAX_LEN,
                    "prompt_pad": PROMPT_PAD, "chunk_size": CHUNK,
                    "requests": len(reqs),
                    "shared_requests": len(shared_reqs),
                    "system_prompt_len": SYS_LEN,
+                   "overload_requests": len(over_reqs),
+                   "overload_pool": OVERLOAD_POOL,
                    "backend": jax.default_backend(), "smoke": smoke},
         "chunked": chunked,
         "stall": stall,
         "static": stat,
         "prefix": prefix,
         "prefix_off": prefix_off,
+        "overload": overload,
         "prefill_tokens_saved": tokens_saved,
         "speedup_chunked_vs_stall": round(vs_stall, 3),
         "speedup_continuous_vs_static": round(vs_static, 3),

@@ -16,7 +16,16 @@ Two perf invariants from PRs 3 and 5 that nothing else guards:
   donated buffer cannot be aliased — on this invariant that warning is
   a failure, not a note.
 
-Both lints drive the *real* loops (a tiny config, a mixed
+- **Preemption does not retrace.** The overload path's victim eviction
+  (``launch.steps.preempt_rows``) runs once per round with a host-built
+  bool mask; a dtype or weak-type leak there would recompile the
+  dispatch every eviction under sustained overload — exactly when the
+  scheduler can least afford it. The lint drives a deterministic
+  preempt→release→re-admit trace twice and requires exactly one trace
+  of the dispatch (and that preemption actually fired, so the check
+  can't go vacuous).
+
+All lints drive the *real* loops (a tiny config, a mixed
 chunked-prefill trace) rather than re-deriving the contracts, so any
 refactor that silently changes the cache keying or breaks aliasing
 fails the gate.
@@ -123,6 +132,39 @@ def _run_instrumented_serve(n_requests: int):
     return seen, caught
 
 
+def _run_overload_serve():
+    """Drive the preemption recovery path twice on one deterministic
+    overload trace: a low-class request holds 2 of the pool's 3
+    allocatable pages when a high-class arrival needs 2 — victim
+    eviction, page release, re-admission with the longer resumed prompt.
+    Returns (per-run preemption counts, preempt_rows trace count)."""
+    import jax
+
+    from repro.launch import steps as STEPS
+    from repro.models import init_model
+    from repro.runtime import generate as GEN
+
+    cfg = _tiny_cfg()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prng = np.random.default_rng(11)
+
+    def req(arrival, priority):
+        return GEN.ServeRequest(
+            prompt=prng.integers(0, cfg.vocab_size, 130).astype(np.int32),
+            gen=20, arrival=arrival, priority=priority)
+
+    reqs = [req(0, 0), req(2, 1)]
+    STEPS.preempt_rows.clear_cache()
+    preempts = []
+    for _ in range(2):
+        res = GEN.serve_continuous(
+            params, cfg, reqs, slots=2, segment=SERVE_SEGMENT,
+            max_len=256, page_size=128, num_pages=4,
+            admission="chunked", chunk_size=64, preemption=True)
+        preempts.append(res.preemptions)
+    return preempts, STEPS.preempt_rows._cache_size()
+
+
 def _run_instrumented_generate():
     """Run the fused ``generate()`` loop (donated caches carry),
     capturing compile-time warnings."""
@@ -191,6 +233,15 @@ def run_lints(*, smoke: bool = False) -> dict:
         if not retraced else
         f"variants retraced (python-scalar/weak-type leak into the jit "
         f"boundary?): {retraced}",
+    })
+
+    preempts, preempt_traces = _run_overload_serve()
+    results.append({
+        "name": "preemption-no-retrace",
+        "ok": min(preempts) >= 1 and preempt_traces == 1,
+        "detail": f"victim eviction fired {preempts} times over two "
+                  f"identical overload runs; preempt_rows compiled "
+                  f"{preempt_traces}x (must be exactly 1)",
     })
 
     donation_msgs = sorted({

@@ -370,7 +370,16 @@ class PagedKVState:
         ``pos == 0`` and a parked table — so releasing it again, or
         releasing with overlapping masks, moves no pages and cannot
         double-enter the free stack. Two finished rows sharing a page
-        decrement it twice through one per-page count, pushing it once."""
+        decrement it twice through one per-page count, pushing it once.
+
+        Preemption contract: the serve loop releases *victim* rows with
+        this same call — a victim's pages that the prefix index pinned
+        (``incref_pages``) decref to the pin's count and stay allocated,
+        never freed, so the evicted request's re-admission can adopt
+        them back while any later ``evict_lru`` unpin still frees them
+        exactly once. Release never needs to know which pages are
+        pinned; the refcount partition ``check_invariants`` enforces is
+        the whole contract."""
         finished = jnp.asarray(finished, jnp.bool_)
         npps = self.pages_per_seq
         held = self.pages_held()

@@ -109,6 +109,20 @@ def main():
                          "tokens to every --continuous request (makes "
                          "--prefix-sharing observable: >= page-size "
                          "tokens shared per request)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="number of SLO classes for --continuous: each "
+                         "request draws a random class in [0, N) (higher "
+                         "= more urgent; orders admission, the chunked "
+                         "token budget and victim selection); per-class "
+                         "p95 TTFT/latency are reported")
+    ap.add_argument("--preemption", action="store_true",
+                    help="page-pressure preemption for --continuous: "
+                         "under pool/slot exhaustion, lower-class victims "
+                         "release their pages and re-enqueue carrying "
+                         "their generated prefix (bit-identical outputs)")
+    ap.add_argument("--overload", type=float, default=1.0,
+                    help="multiply --rate by this factor (arrival rate > "
+                         "service rate exercises --preemption; 1 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
@@ -130,7 +144,8 @@ def main():
         rng = np.random.default_rng(args.seed)
         with mesh, use_hints(mesh):
             params = init_model(key, cfg)
-            arrivals = np.cumsum(rng.exponential(1.0 / max(args.rate, 1e-6),
+            rate = max(args.rate, 1e-6) * max(args.overload, 1e-6)
+            arrivals = np.cumsum(rng.exponential(1.0 / rate,
                                                  args.requests)).astype(int)
             system = rng.integers(0, cfg.vocab_size, args.system_prompt_len
                                   ).astype(np.int32)
@@ -140,7 +155,9 @@ def main():
                         max(1, args.prompt_len // 2), args.prompt_len + 1))
                     ).astype(np.int32)]),
                 gen=int(rng.integers(max(2, args.gen // 4), args.gen + 1)),
-                arrival=int(t)) for t in arrivals]
+                arrival=int(t),
+                priority=int(rng.integers(0, max(1, args.priority_classes)))
+            ) for t in arrivals]
             res = serve_continuous(
                 params, cfg, reqs, slots=args.batch, segment=args.segment,
                 max_len=args.system_prompt_len + args.prompt_len + args.gen,
@@ -148,7 +165,8 @@ def main():
                 key=key if args.temperature > 0 else None,
                 eos_id=args.eos_id, admission=args.admission,
                 chunk_size=args.chunk_size, token_budget=args.token_budget,
-                prefix_sharing=args.prefix_sharing)
+                prefix_sharing=args.prefix_sharing,
+                preemption=args.preemption)
         util = max((u for _, u in res.page_util), default=0.0)
         print(f"[serve] arch={cfg.name} continuous slots={args.batch} "
               f"segment={args.segment} page_size={args.page_size} "
@@ -171,6 +189,15 @@ def main():
                   f"({res.prefix_hit_rate:.0%}), "
                   f"{res.shared_prefix_tokens} prompt tokens adopted "
                   f"from shared pages ({res.prefill_tokens} prefilled)")
+        if args.preemption or args.priority_classes > 1:
+            print(f"[serve] preemptions: {res.preemptions}")
+            for prio in sorted(res.class_summary(), reverse=True):
+                d = res.class_summary()[prio]
+                print(f"[serve]   class {prio}: {d['n']} requests, "
+                      f"{d['preemptions']} preemptions, p95 TTFT "
+                      f"{d['p95_ttft_s']*1e3:.0f} ms, p95 latency "
+                      f"{d['p95_latency_s']*1e3:.0f} ms, p95 admission "
+                      f"delay {d['p95_admit_delay_steps']} steps")
         return
 
     with mesh, use_hints(mesh):

@@ -220,7 +220,12 @@ class ServeSlotState:
     pool, never re-prefilled); the mixed segment body needs no change —
     it simply sees fewer prompt tokens left. ``keys`` is a per-slot PRNG
     stream (``fold_in`` of the serve key by request id), making sampled
-    outputs independent of admission interleaving."""
+    outputs independent of admission interleaving. ``prio`` is the
+    slot's SLO class (higher = more urgent): it orders the mixed body's
+    prompt-chunk grants, so under budget contention high-priority
+    prefills finish first. ``pgen`` is the slot's preemption generation
+    — bumped by every ``preempt_rows`` so host-side readbacks can tell a
+    re-admitted slot from the victim it replaced."""
 
     tok: Any                  # (B, 1) int32 — last sampled token
     pos: Any                  # (B,) int32 — stream position (cache pos)
@@ -230,6 +235,8 @@ class ServeSlotState:
     cursor: Any               # (B,) int32 — prompt tokens prefilled so far
     plen: Any                 # (B,) int32 — prompt length
     prompt_buf: Any           # (B, prompt_pad) int32 — queued prompt ids
+    prio: Any                 # (B,) int32 — SLO class (higher = urgent)
+    pgen: Any                 # (B,) int32 — preemption generation counter
 
     @classmethod
     def init(cls, slots: int, prompt_pad: int, key=None) -> "ServeSlotState":
@@ -242,13 +249,15 @@ class ServeSlotState:
             rem=jnp.zeros((slots,), jnp.int32),
             cursor=jnp.zeros((slots,), jnp.int32),
             plen=jnp.zeros((slots,), jnp.int32),
-            prompt_buf=jnp.zeros((slots, max(prompt_pad, 1)), jnp.int32))
+            prompt_buf=jnp.zeros((slots, max(prompt_pad, 1)), jnp.int32),
+            prio=jnp.zeros((slots,), jnp.int32),
+            pgen=jnp.zeros((slots,), jnp.int32))
 
 
 jax.tree_util.register_dataclass(
     ServeSlotState,
     data_fields=("tok", "pos", "keys", "done", "rem", "cursor", "plen",
-                 "prompt_buf"),
+                 "prompt_buf", "prio", "pgen"),
     meta_fields=())
 
 
@@ -269,7 +278,7 @@ def admit_rows(state, slot_ids):
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
-                  shared=None):
+                  shared=None, prios=None):
     """Chunked admission is *only* this state write (plus the host's page
     reservation): enqueue the prompt token ids and arm the slot's phase
     state — the segments prefill chunk-by-chunk, page-native. No prompt
@@ -278,10 +287,14 @@ def admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
     pages (``PagedKVState.adopt_prefix`` ran in the same admission
     round): ``cursor`` and ``pos`` start there, so chunked prefill picks
     up at the first unshared token and the skipped tokens are never
-    forwarded at all."""
+    forwarded at all. ``prios`` (n,) int32 sets the slot's SLO class
+    (``None`` = class 0 — the write still happens, so a slot freed by a
+    high-priority victim never leaks its stale class)."""
     rows = admit_rows(state, slot_ids)
     start = jnp.zeros_like(lengths) if shared is None \
         else jnp.asarray(shared, jnp.int32)
+    prio = jnp.zeros_like(lengths) if prios is None \
+        else jnp.asarray(prios, jnp.int32)
     return dataclasses.replace(
         state,
         prompt_buf=state.prompt_buf.at[rows].set(prompts, mode="drop"),
@@ -291,16 +304,19 @@ def admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
         tok=state.tok.at[rows].set(0, mode="drop"),
         done=state.done.at[rows].set(False, mode="drop"),
         rem=state.rem.at[rows].set(gens, mode="drop"),
-        keys=state.keys.at[rows].set(req_keys, mode="drop"))
+        keys=state.keys.at[rows].set(req_keys, mode="drop"),
+        prio=state.prio.at[rows].set(prio, mode="drop"))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
-                req_keys):
+                req_keys, prios=None):
     """Stall-mode admission state write, after the stop-the-world prefill
     sampled ``tok0``: the slot enters directly in the decode phase
     (``cursor == plen``)."""
     rows = admit_rows(state, slot_ids)
+    prio = jnp.zeros_like(lengths) if prios is None \
+        else jnp.asarray(prios, jnp.int32)
     return dataclasses.replace(
         state,
         tok=state.tok.at[rows].set(tok0, mode="drop"),
@@ -309,7 +325,35 @@ def admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
         cursor=state.cursor.at[rows].set(lengths, mode="drop"),
         done=state.done.at[rows].set(new_done, mode="drop"),
         rem=state.rem.at[rows].set(new_rem, mode="drop"),
-        keys=state.keys.at[rows].set(req_keys, mode="drop"))
+        keys=state.keys.at[rows].set(req_keys, mode="drop"),
+        prio=state.prio.at[rows].set(prio, mode="drop"))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def preempt_rows(state, mask):
+    """One-dispatch victim release: evict every slot in ``mask`` (B,)
+    bool from the batch. The victims' phase state zeroes and ``done``
+    raises — the next segment's bodies mask them out exactly like
+    finished slots, so their (host-released) pages are never touched —
+    while ``pgen`` bumps so readbacks attribute in-flight segment output
+    to the old occupant, not a future re-admission. ``keys`` is left
+    as-is: the host snapshots the victim's stream *before* preempting
+    and restores it at re-admission, which is what makes a resumed
+    sampled request's draws bit-identical to never having been
+    preempted."""
+    mask = jnp.asarray(mask, jnp.bool_)
+    keep = ~mask
+    zero = jnp.zeros_like(state.pos)
+    return dataclasses.replace(
+        state,
+        tok=jnp.where(mask[:, None], 0, state.tok),
+        pos=jnp.where(keep, state.pos, zero),
+        done=state.done | mask,
+        rem=jnp.where(keep, state.rem, zero),
+        cursor=jnp.where(keep, state.cursor, zero),
+        plen=jnp.where(keep, state.plen, zero),
+        prio=jnp.where(keep, state.prio, zero),
+        pgen=state.pgen + mask.astype(jnp.int32))
 
 
 def advance_step_rows(logits, keys, temperature, done, rem, n, active, *,
@@ -426,12 +470,17 @@ def make_serve_segment(cfg, *, segment: int, sample: bool,
         prefilling = live & (st.cursor < st.plen)
         decoding = live & (st.cursor >= st.plen)
         # decode-maximal budget: decode slots first, prompt chunks fill
-        # the leftover greedily in slot order
+        # the leftover greedily in priority order (stable argsort — equal
+        # priorities keep slot order, so an all-class-0 batch grants
+        # exactly as before)
         want = jnp.where(prefilling,
                          jnp.minimum(chunk, st.plen - st.cursor), 0)
-        cum = jnp.cumsum(want) - want                    # exclusive
+        order = jnp.argsort(-st.prio, stable=True)
+        want_o = want[order]
+        cum_o = jnp.cumsum(want_o) - want_o              # exclusive
         left = budget - jnp.sum(decoding.astype(jnp.int32))
-        grant = jnp.clip(left - cum, 0, want)
+        grant = jnp.zeros_like(want).at[order].set(
+            jnp.clip(left - cum_o, 0, want_o))
         n_new = grant + decoding.astype(jnp.int32)
         # token block: prompt chunk at the cursor, or [tok, pad...]
         cols = st.cursor[:, None] + jnp.arange(chunk, dtype=jnp.int32)

@@ -10,9 +10,10 @@ failure" is injected, but every code path is the real one):
 - **Elastic re-mesh**: checkpoints are mesh-independent; ``run()`` accepts
   any mesh, so a job checkpointed on 2 pods restarts on 1 (or 4) with the
   same model state (re-sharded on restore).
-- **Straggler mitigation**: a step-time watchdog tracks a robust moving
-  median; steps slower than ``straggler_factor``× median are logged and
-  counted. On a real fleet this signal feeds the controller that evicts /
+- **Straggler mitigation**: a step-time watchdog (the shared
+  ``runtime.watchdog.StragglerWatchdog``, also run by the serve loop
+  over its segment times) tracks a robust moving median; steps slower
+  than ``straggler_factor``× median are logged and counted. On a real fleet this signal feeds the controller that evicts /
   re-shards around the slow host (here: surfaced in ``stats`` and the
   log). Persistent stragglers trigger a checkpoint so any subsequent
   eviction loses zero work.
@@ -29,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpointing import Checkpointer
+from repro.runtime.watchdog import StragglerWatchdog
 
 
 @dataclasses.dataclass
@@ -39,6 +41,103 @@ class FTConfig:
     straggler_factor: float = 2.0
     straggler_ckpt_threshold: int = 3     # consecutive slow steps
     inject_failure_at: int | None = None  # simulate preemption (tests)
+
+
+# ---------------------------------------------------------------------------
+# Serve-loop fault injection (the serving analogue of inject_failure_at)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeFaultPlan:
+    """Seeded fault-injection plan for ``serve_continuous``: which faults
+    to force and when, in the scheduler's virtual clock (decode steps).
+
+    Three fault families, each with a deterministic step list (tests:
+    ``kill_steps=(12,)`` kills at the first boundary at or past step 12)
+    and an independent per-round probability (soak runs):
+
+    - **kills**: force-preempt one live resumable slot — the victim's
+      pages release, its request re-enqueues carrying the generated
+      prefix, and it resumes through the ordinary chunked re-prefill
+      path. Exercises the preemption recovery machinery even with
+      priority preemption disabled.
+    - **page pressure**: subtract ``pressure_pages`` phantom pages from
+      the admission budget for one round — the overload spike that
+      drives victim selection and index eviction without needing a
+      bigger trace.
+    - **stragglers**: sleep ``straggle_s`` before a segment dispatch so
+      the segment watchdog (the shared ``StragglerWatchdog``) sees a
+      genuine outlier.
+    """
+
+    seed: int = 0
+    kill_prob: float = 0.0
+    kill_steps: tuple = ()
+    pressure_prob: float = 0.0
+    pressure_pages: int = 0
+    pressure_steps: tuple = ()
+    straggle_prob: float = 0.0
+    straggle_s: float = 0.0
+    straggle_steps: tuple = ()
+
+    @property
+    def may_kill(self) -> bool:
+        return self.kill_prob > 0.0 or bool(self.kill_steps)
+
+
+class ServeFaultInjector:
+    """Runtime side of a ``ServeFaultPlan``: one seeded RNG, one cursor
+    per deterministic step list. The serve loop polls it once per
+    scheduling round; the injector counts what it injected so tests can
+    assert the faults actually fired (non-vacuous recovery coverage)."""
+
+    def __init__(self, plan: ServeFaultPlan):
+        self.plan = plan
+        self.rng = np.random.default_rng(plan.seed)
+        self._kills = sorted(plan.kill_steps)
+        self._pressure = sorted(plan.pressure_steps)
+        self._straggles = sorted(plan.straggle_steps)
+        self.kills_requested = 0
+        self.pressure_events = 0
+        self.straggle_events = 0
+
+    @staticmethod
+    def _due(pending: list, step: int) -> bool:
+        hit = False
+        while pending and pending[0] <= step:
+            pending.pop(0)
+            hit = True
+        return hit
+
+    def want_kill(self, step: int) -> bool:
+        hit = self._due(self._kills, step)
+        if self.plan.kill_prob > 0.0 \
+                and self.rng.random() < self.plan.kill_prob:
+            hit = True
+        self.kills_requested += hit
+        return hit
+
+    def phantom_pages(self, step: int) -> int:
+        """Pages to subtract from this round's admission budget."""
+        hit = self._due(self._pressure, step)
+        if self.plan.pressure_prob > 0.0 \
+                and self.rng.random() < self.plan.pressure_prob:
+            hit = True
+        if not hit:
+            return 0
+        self.pressure_events += 1
+        return int(self.plan.pressure_pages)
+
+    def straggle(self, step: int) -> float:
+        """Seconds to stall before the next segment dispatch."""
+        hit = self._due(self._straggles, step)
+        if self.plan.straggle_prob > 0.0 \
+                and self.rng.random() < self.plan.straggle_prob:
+            hit = True
+        if not hit:
+            return 0.0
+        self.straggle_events += 1
+        return float(self.plan.straggle_s)
 
 
 class TrainDriver:
@@ -52,9 +151,10 @@ class TrainDriver:
         self.ckpt = Checkpointer(ft.ckpt_dir, keep=ft.keep)
         self.p_sh, self.o_sh = param_shardings, opt_shardings
         self.step = 0
-        self.step_times: list[float] = []
-        self.straggler_events = 0
-        self._slow_streak = 0
+        self.wd = StragglerWatchdog(
+            factor=ft.straggler_factor,
+            streak_threshold=ft.straggler_ckpt_threshold)
+        self.step_times = self.wd.times        # same list, shared in place
 
     # -- restart ------------------------------------------------------------
 
@@ -74,23 +174,19 @@ class TrainDriver:
 
     # -- main loop ----------------------------------------------------------
 
+    @property
+    def straggler_events(self) -> int:
+        return self.wd.events
+
     def _watchdog(self, dt: float):
-        self.step_times.append(dt)
-        hist = self.step_times[-32:]
-        if len(hist) >= 8:
-            med = float(np.median(hist[:-1]))
-            if dt > self.ft.straggler_factor * med:
-                self.straggler_events += 1
-                self._slow_streak += 1
-                print(f"[ft] straggler: step {self.step} took {dt:.3f}s "
-                      f"(median {med:.3f}s)", flush=True)
-                if self._slow_streak >= self.ft.straggler_ckpt_threshold:
-                    print("[ft] persistent straggler -> protective "
-                          "checkpoint", flush=True)
-                    self._save()
-                    self._slow_streak = 0
-            else:
-                self._slow_streak = 0
+        verdict = self.wd.observe(dt)
+        if verdict.straggler:
+            print(f"[ft] straggler: step {self.step} took {dt:.3f}s "
+                  f"(median {verdict.median:.3f}s)", flush=True)
+            if verdict.persistent:
+                print("[ft] persistent straggler -> protective "
+                      "checkpoint", flush=True)
+                self._save()
 
     def _save(self, blocking: bool = False):
         if getattr(self, "_last_saved", None) == self.step:

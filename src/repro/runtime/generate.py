@@ -304,22 +304,28 @@ def generate(params, cfg, prompts, gen: int, *, frontend=None,
 class ServeRequest:
     """One serving request of an arrival trace. ``arrival`` is in virtual
     time units = decode steps (the scheduler's clock), ``gen`` counts all
-    generated tokens including the one sampled from prefill."""
+    generated tokens including the one sampled from prefill.
+    ``priority`` is the request's SLO class (higher = more urgent): it
+    orders admission, steers the mixed segments' prompt-chunk budget and
+    selects preemption victims (strictly lower classes only)."""
     prompt: Any                      # (S,) int32 token ids
     gen: int
     arrival: int = 0
+    priority: int = 0
 
 
 @dataclasses.dataclass
 class CompletedRequest:
     index: int                       # position in the submitted trace
     arrival: int                     # virtual (step) arrival time
-    admitted_step: int               # step count when admitted to a slot
+    admitted_step: int               # step count when FIRST admitted
     finished_step: int               # step count when the slot freed
     arrived_s: float                 # wall-clock when first admittable
     finished_s: float                # wall-clock at the freeing boundary
     tokens: Any                      # (gen,) int32 generated ids
     first_token_s: float = 0.0       # wall-clock of the first emitted token
+    priority: int = 0                # the request's SLO class
+    preemptions: int = 0             # times this request was evicted
 
     @property
     def latency_s(self) -> float:
@@ -344,6 +350,8 @@ class ServeResult:
     prefill_tokens: int = 0          # prompt tokens actually prefilled
     shared_prefix_tokens: int = 0    # prompt tokens skipped via adoption
     prefix_hits: int = 0             # admissions that adopted >= 1 page
+    preemptions: int = 0             # victim evictions (incl. fault kills)
+    straggler_segments: int = 0      # segments the watchdog flagged slow
 
     @property
     def total_tokens(self) -> int:
@@ -368,11 +376,41 @@ class ServeResult:
             return 0.0
         return vals[min(int(q * len(vals)), len(vals) - 1)]
 
-    def latency_quantile(self, q: float) -> float:
-        return self._quantile((c.latency_s for c in self.completed), q)
+    def _of_class(self, priority):
+        return (c for c in self.completed
+                if priority is None or c.priority == priority)
 
-    def ttft_quantile(self, q: float) -> float:
-        return self._quantile((c.ttft_s for c in self.completed), q)
+    def latency_quantile(self, q: float, priority: int | None = None):
+        return self._quantile(
+            (c.latency_s for c in self._of_class(priority)), q)
+
+    def ttft_quantile(self, q: float, priority: int | None = None):
+        return self._quantile(
+            (c.ttft_s for c in self._of_class(priority)), q)
+
+    def admission_delay_quantile(self, q: float,
+                                 priority: int | None = None):
+        """Virtual-time TTFT proxy: decode steps from arrival to first
+        admission. Deterministic (no wall clock), so SLO assertions on it
+        are machine-independent — the bench smoke gate."""
+        return self._quantile(
+            (c.admitted_step - c.arrival for c in self._of_class(priority)),
+            q)
+
+    def class_summary(self) -> dict:
+        """Per-SLO-class accounting: count, total preemptions suffered,
+        and p95 TTFT / latency / admission delay."""
+        out = {}
+        for c in self.completed:
+            d = out.setdefault(c.priority, {"n": 0, "preemptions": 0})
+            d["n"] += 1
+            d["preemptions"] += c.preemptions
+        for prio, d in out.items():
+            d["p95_ttft_s"] = self.ttft_quantile(0.95, priority=prio)
+            d["p95_latency_s"] = self.latency_quantile(0.95, priority=prio)
+            d["p95_admit_delay_steps"] = self.admission_delay_quantile(
+                0.95, priority=prio)
+        return out
 
 
 @functools.lru_cache(maxsize=32)
@@ -405,20 +443,27 @@ def _release_slots(caches, finished):
 
 
 def _admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
-                   shared=None):
+                   shared=None, prios=None):
     """Chunked admission state write — lives in ``launch.steps`` next to
     ``ServeSlotState``; kept callable from here for the serve loop and
     its tests."""
     from repro.launch.steps import admit_chunked
     return admit_chunked(state, slot_ids, prompts, lengths, gens, req_keys,
-                         shared)
+                         shared, prios)
+
+
+def _preempt_rows(state, mask):
+    """One-dispatch victim eviction of every slot in ``mask`` — see
+    ``launch.steps.preempt_rows``."""
+    from repro.launch.steps import preempt_rows
+    return preempt_rows(state, mask)
 
 
 def _admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
-                 req_keys):
+                 req_keys, prios=None):
     from repro.launch.steps import admit_stall
     return admit_stall(state, slot_ids, lengths, tok0, new_done, new_rem,
-                       req_keys)
+                       req_keys, prios)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -554,6 +599,8 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                      admission: str = "chunked", chunk_size: int = 32,
                      token_budget: int | None = None,
                      prefix_sharing: bool = False,
+                     preemption: bool = False, faults=None,
+                     straggler_factor: float = 2.0,
                      debug_invariants: bool | None = None,
                      audit=None) -> ServeResult:
     """Serve an arrival trace with continuous batching over a paged pool.
@@ -606,7 +653,32 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     never overwritten in serving — copy-on-write in the append paths
     still guards the general case at the state level. Under page
     pressure the index evicts idle pinned pages (LRU, active adopters
-    protected) before stalling the head of the queue. Bit-exactness:
+    protected) before stalling the head of the queue.
+
+    **Overload survival** (DESIGN.md §Overload survival):
+    ``preemption=True`` (chunked admission only) lets admission make
+    room for a higher-priority arrival when the pool or the slots are
+    exhausted: victim slots — strictly lower ``ServeRequest.priority``
+    only, lowest class first, then most reserved pages — are evicted in
+    one ``preempt_rows`` dispatch, their pages return to the pool
+    (pinned prefix pages decref, never free), and their requests
+    re-enqueue carrying the prompt *plus every token generated so far*.
+    The resumed request re-prefills that stream through ordinary chunked
+    admission (near-free when its pages are still registered in the
+    prefix index), its slot PRNG stream is restored from a snapshot
+    taken at eviction, and its remaining budget shrinks by what it
+    already emitted — so greedy *and* sampled outputs are bit-identical
+    to never having been preempted. Only requests whose full stream fits
+    the per-slot window (``len + gen <= capacity``) are preemptable.
+    ``faults`` (a ``runtime.fault_tolerance.ServeFaultPlan``) injects
+    seeded overload: forced slot kills (the same eviction/resume path,
+    regardless of ``preemption``), phantom page-pressure spikes
+    subtracted from the admission budget, and sleeps before segment
+    dispatches that the segment watchdog (``StragglerWatchdog`` at
+    ``straggler_factor`` x median, shared with the train driver) must
+    flag — counted in ``ServeResult.straggler_segments``.
+
+    Bit-exactness:
     a page's K/V bytes are a pure function of its tokens and
     page-aligned position, and chunk boundaries don't change the fused
     kernels' arithmetic, so shared-path tokens are bit-identical to the
@@ -634,11 +706,24 @@ def serve_continuous(params, cfg, requests, *, slots: int,
 
     if admission not in ADMISSIONS:
         raise ValueError(f"admission={admission!r} not in {ADMISSIONS}")
+    if (preemption or faults is not None) and admission != "chunked":
+        raise ValueError(
+            "preemption / fault injection require admission='chunked' "
+            "(victims resume through chunked re-prefill of their "
+            "prompt + generated prefix)")
     _validate_serve_cfg(cfg, admission=admission,
                         chunk=max(1, chunk_size))
     requests = list(requests)
     if not requests:
         return ServeResult([], 0.0, 0, 0, 0, [])
+    injector = None
+    if faults is not None:
+        from repro.runtime.fault_tolerance import ServeFaultInjector
+        injector = ServeFaultInjector(faults)
+    from repro.runtime.watchdog import StragglerWatchdog
+    watchdog = StragglerWatchdog(factor=straggler_factor)
+    may_preempt = preemption or (injector is not None
+                                 and injector.plan.may_kill)
     prompt_pad = max(int(np.asarray(r.prompt).size) for r in requests)
     longest = max(int(np.asarray(r.prompt).size) + r.gen for r in requests)
     max_len = max_len or longest
@@ -652,6 +737,23 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     pool_pages = geo.k.shape[1] - 1                # minus parking
     pages_per_seq = geo.page_table.shape[2]
     capacity = pages_per_seq * page_size
+
+    # pending streams: what admission will actually prefill per request —
+    # the original prompt, or (after a preemption) prompt + generated
+    # prefix with the remaining token budget. Page need is invariant
+    # across resumes (plen' + gen' == plen + gen), so only requests whose
+    # whole stream fits the per-slot window are resumable, and the prompt
+    # buffer must hold up to plen + gen - 1 tokens for them.
+    pending = {i: (np.asarray(r.prompt, np.int32).reshape(-1), int(r.gen))
+               for i, r in enumerate(requests)}
+    prio_req = [int(getattr(r, "priority", 0)) for r in requests]
+    resumable = [int(np.asarray(r.prompt).size) + r.gen <= capacity
+                 for r in requests]
+    if may_preempt:
+        prompt_pad = max(
+            int(np.asarray(r.prompt).size) + (r.gen - 1 if resumable[i]
+                                              else 0)
+            for i, r in enumerate(requests))
 
     index = None
     if prefix_sharing:
@@ -722,10 +824,14 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     plen_host = [0] * slots                        # prompt length per slot
     cursor_host = [0] * slots                      # host mirror of cursor
     prefilling = [False] * slots                   # host mirror of phase
+    slot_prompt = [None] * slots                   # admitted pending stream
     arrived_wall = {}
     first_tok = {}
     emitted = {i: [] for i in range(len(requests))}
     admitted_step = {}
+    preempt_count = {}                             # request -> evictions
+    resume_keys = {}                               # request -> PRNG snapshot
+    n_preempts = 0
     completed = []
     page_util = []
 
@@ -744,6 +850,7 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     segments = 0
     rounds = 0
     stall_s = 0.0
+    straggler_segs = 0
     t0 = time.perf_counter()
 
     def finish(slot, now_s):
@@ -753,47 +860,105 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             admitted_step=admitted_step[i], finished_step=step,
             arrived_s=arrived_wall[i], finished_s=now_s,
             first_token_s=first_tok.get(i, now_s),
-            tokens=np.asarray(emitted[i][:requests[i].gen], np.int32)))
+            tokens=np.asarray(emitted[i][:requests[i].gen], np.int32),
+            priority=prio_req[i],
+            preemptions=preempt_count.get(i, 0)))
         slot_req[slot] = None
         reserved[slot] = 0
         prefilling[slot] = False
+        slot_prompt[slot] = None
         slot_shared[slot] = []
         slot_shareable[slot] = False
         reg_done[slot] = 0
 
     to_release = []                                # slots freed, pages held
 
+    def preempt_slot(slot):
+        """Evict ``slot``'s request (host side): snapshot its PRNG
+        stream, rebuild its pending entry as prompt + generated prefix
+        with the leftover token budget, clear the slot's host mirrors and
+        re-enqueue. The device-row clear (``preempt_rows``) and the page
+        release are batched by the caller — one dispatch per round."""
+        nonlocal n_preempts
+        i = slot_req[slot]
+        if sample:
+            # the stream already advanced once per emitted token; resuming
+            # from this snapshot is what keeps sampled outputs
+            # bit-identical to an unpreempted serve (eager device_get:
+            # a fault kill may re-admit this request in the same round)
+            resume_keys[i] = np.asarray(jax.device_get(state.keys[slot]))
+        g = len(emitted[i])
+        prompt0 = np.asarray(requests[i].prompt, np.int32).reshape(-1)
+        pending[i] = (
+            np.concatenate([prompt0, np.asarray(emitted[i][:g], np.int32)]),
+            requests[i].gen - g)
+        preempt_count[i] = preempt_count.get(i, 0) + 1
+        n_preempts += 1
+        slot_req[slot] = None
+        reserved[slot] = 0
+        prefilling[slot] = False
+        cursor_host[slot] = 0
+        plen_host[slot] = 0
+        slot_prompt[slot] = None
+        slot_shared[slot] = []
+        slot_shareable[slot] = False
+        reg_done[slot] = 0
+        queue.append(i)
+        queue.sort(key=lambda j: (requests[j].arrival, j))
+        to_release.append(slot)
+
     while queue or any(s is not None for s in slot_req):
         now_s = time.perf_counter() - t0
         for i in queue:
             if requests[i].arrival <= step:
                 arrived_wall.setdefault(i, now_s)
+        victims_round = []
+        if injector is not None and injector.want_kill(step):
+            # forced slot kill: seeded pick among live resumable slots,
+            # evicted through the exact preemption recovery path (and a
+            # candidate for re-admission this very round)
+            live = [s for s in range(slots)
+                    if slot_req[s] is not None and resumable[slot_req[s]]]
+            if live:
+                s = live[int(injector.rng.integers(len(live)))]
+                preempt_slot(s)
+                victims_round.append(s)
         # -- admission: arrived requests into free, page-backed slots ----
         # budget: reservations + index pins both count against the pool.
         # A pinned page inside an active donor's reservation is counted
         # twice — conservative, never overdrawn; the win comes from
-        # adopters reserving `need - shared` pages.
+        # adopters reserving `need - shared` pages. Fault-injected
+        # pressure spikes subtract phantom pages for one round.
         free_slots = [s for s in range(slots) if slot_req[s] is None]
-        page_budget = pool_pages - sum(reserved) - len(pins)
+        phantom = injector.phantom_pages(step) if injector is not None \
+            else 0
+        page_budget = pool_pages - sum(reserved) - len(pins) - phantom
         adm = []
         adm_shared = {}                            # slot -> adopted pages
         evict_batch = []
-        for i in list(queue):
-            if not free_slots or requests[i].arrival > step:
+        # candidate order = admission order: SLO class first, then
+        # arrival, then trace position (a snapshot — this round's
+        # victims re-enter the queue but only become candidates next
+        # round, so preemption can never livelock within a round)
+        cand = sorted((i for i in queue if requests[i].arrival <= step),
+                      key=lambda j: (-prio_req[j], requests[j].arrival, j))
+        for i in cand:
+            if not free_slots and not preemption:
                 break
-            req = requests[i]
-            plen_i = int(np.asarray(req.prompt).size)
+            prompt_i, gen_i = pending[i]
+            plen_i = int(prompt_i.size)
             sh_pages = []
-            if index is not None and plen_i + req.gen <= capacity:
+            if index is not None and plen_i + gen_i <= capacity:
                 # cap at plen-1: >= 1 prompt token must prefill live (the
                 # first sampled token needs this request's last-position
                 # logits); no sharing for window-wrapping requests (their
                 # COW pops would need headroom the reservation lacks)
-                sh_pages = index.lookup(req.prompt, max_tokens=plen_i - 1)
-            need = pages_for(req) - len(sh_pages)
+                sh_pages = index.lookup(prompt_i, max_tokens=plen_i - 1)
+            need = min(-(-(plen_i + gen_i) // page_size),
+                       pages_per_seq) - len(sh_pages)
             if need > page_budget and index is not None and len(index):
-                # evict idle pinned prefixes (LRU) before stalling the
-                # head of the queue; pages adopted by active slots (or
+                # evict idle pinned prefixes (LRU) before preempting or
+                # stalling the head; pages adopted by active slots (or
                 # about to be, by this request) keep their pin
                 protected = {p for lst in slot_shared for p in lst}
                 protected |= set(sh_pages)
@@ -802,24 +967,56 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                     pins.pop(p, None)
                 evict_batch.extend(evicted)
                 page_budget += len(evicted)
-            if need > page_budget:
+            if preemption and (need > page_budget or not free_slots):
+                # page-pressure preemption: evict strictly-lower-class
+                # victims — lowest class first, then most reserved pages
+                # — until this candidate fits. All-or-nothing: a
+                # candidate that still wouldn't fit evicts nobody.
+                cast = sorted(
+                    (s for s in range(slots)
+                     if slot_req[s] is not None
+                     and prio_req[slot_req[s]] < prio_req[i]
+                     and resumable[slot_req[s]]),
+                    key=lambda s: (prio_req[slot_req[s]], -reserved[s], s))
+                gain, picked = 0, []
+                for s in cast:
+                    if need <= page_budget + gain \
+                            and (free_slots or picked):
+                        break
+                    picked.append(s)
+                    gain += reserved[s]
+                if need <= page_budget + gain and (free_slots or picked):
+                    for s in picked:
+                        preempt_slot(s)            # reserved[s] -> 0
+                        victims_round.append(s)
+                        free_slots.append(s)
+                    page_budget += gain
+            if not free_slots or need > page_budget:
                 break                              # head-of-line: keep order
             slot = free_slots.pop(0)
             queue.remove(i)
             slot_req[slot] = i
             reserved[slot] = need
             page_budget -= need
-            admitted_step[i] = step
+            admitted_step.setdefault(i, step)      # first admission: TTFT
             adm.append((slot, i))
             adm_shared[slot] = sh_pages
+            slot_prompt[slot] = prompt_i
             slot_shared[slot] = list(sh_pages)
             slot_shareable[slot] = (index is not None
-                                    and plen_i + req.gen <= capacity)
+                                    and plen_i + gen_i <= capacity)
             reg_done[slot] = len(sh_pages)         # adopted = already indexed
             sh_toks = len(sh_pages) * page_size
             prefill_tokens += plen_i - sh_toks
             shared_tokens += sh_toks
             prefix_hits += bool(sh_pages)
+        if victims_round:
+            # one-dispatch device-row clear: the victims' done flag
+            # raises before any release/adopt/admit dispatch and before
+            # the next segment, so the scan never touches freed pages
+            vmask = np.zeros((slots,), bool)
+            vmask[victims_round] = True
+            state = _preempt_rows(state, jnp.asarray(vmask))
         if adm and to_release:
             # deferred page hand-back: freed slots accumulate across
             # segment boundaries and release in one dispatch right before
@@ -842,17 +1039,28 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             prompts = np.zeros((slots, prompt_pad), np.int32)
             lengths = np.ones((slots,), np.int32)
             gens = np.zeros((slots,), np.int32)
+            prios = np.zeros((slots,), np.int32)
             slot_ids = np.full((slots,), -1, np.int32)
             rids = np.zeros((slots,), np.int32)
             for row, (slot, i) in enumerate(adm):
-                p = np.asarray(requests[i].prompt, np.int32).reshape(-1)
+                p, g = pending[i]
                 prompts[row, :p.size] = p
                 lengths[row] = p.size
-                gens[row] = requests[i].gen
+                gens[row] = g
+                prios[row] = prio_req[i]
                 slot_ids[row] = slot
                 rids[row] = i
                 plen_host[slot] = p.size
             req_keys = fold_keys(base_key, jnp.asarray(rids))
+            if resume_keys:
+                # resumed rows restore the PRNG snapshot taken at their
+                # eviction instead of restarting the fold_in stream — the
+                # draws continue exactly where the victim left off
+                rk = np.asarray(req_keys).copy()
+                for row, (slot, i) in enumerate(adm):
+                    if i in resume_keys:
+                        rk[row] = resume_keys.pop(i)
+                req_keys = jnp.asarray(rk)
             lengths_d = jnp.asarray(lengths)
             slot_ids_d = jnp.asarray(slot_ids)
             if admission == "chunked":
@@ -878,7 +1086,8 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                 state = _admit_chunked(state, slot_ids_d,
                                        jnp.asarray(prompts), lengths_d,
                                        jnp.asarray(gens), req_keys,
-                                       jnp.asarray(shared_rows))
+                                       jnp.asarray(shared_rows),
+                                       jnp.asarray(prios))
                 for row, (slot, i) in enumerate(adm):
                     prefilling[slot] = True
                     cursor_host[slot] = int(shared_rows[row])
@@ -907,7 +1116,8 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                                          and t0_tok == eos_id))
                 state = _admit_stall(
                     state, slot_ids_d, lengths_d, tok0,
-                    jnp.asarray(new_done), jnp.asarray(new_rem), req_keys)
+                    jnp.asarray(new_done), jnp.asarray(new_rem), req_keys,
+                    jnp.asarray(prios))
                 jax.block_until_ready(state.tok)
                 stall_s += time.perf_counter() - t_stall
             if audit is not None:
@@ -934,6 +1144,11 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         # -- fused segment: mixed while any slot is mid-prompt (sized to
         # the chunks actually left), pure decode otherwise — decode-only
         # phases never pay chunk-wide q width
+        t_seg = time.perf_counter()
+        if injector is not None:
+            pause = injector.straggle(step)
+            if pause > 0.0:
+                time.sleep(pause)                  # injected straggler
         if admission == "chunked" and any(prefilling):
             # steps of mixed phase: bounded below by the largest single
             # prompt (one chunk per slot per step) and by total prefill
@@ -959,6 +1174,8 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         page_util.append((step, sum(reserved) / max(pool_pages, 1)))
         toks_np, emits_np, done_np, cursor_np = jax.device_get(
             (toks, emits, state.done, state.cursor))       # one sync
+        straggler_segs += watchdog.observe(
+            time.perf_counter() - t_seg).straggler
         now_s = time.perf_counter() - t0
         for s in range(slots):
             if slot_req[s] is None:
@@ -989,7 +1206,12 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                     _first_paged(caches).page_table[0]))
                 new_pins = []
                 for s, full in reg_rows:
-                    got = index.register(requests[slot_req[s]].prompt,
+                    # the slot's *pending* stream, not the original
+                    # prompt: a resumed slot prefills prompt + generated
+                    # prefix, and those pages hash under that stream —
+                    # which is also what makes a re-preemption's
+                    # re-admission adopt them back nearly for free
+                    got = index.register(slot_prompt[s],
                                          table[s, :full])
                     reg_done[s] = full
                     new_pins.extend(got)
@@ -1012,4 +1234,5 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                        page_util=page_util, prefill_stall_s=stall_s,
                        prefill_tokens=prefill_tokens,
                        shared_prefix_tokens=shared_tokens,
-                       prefix_hits=prefix_hits)
+                       prefix_hits=prefix_hits, preemptions=n_preempts,
+                       straggler_segments=straggler_segs)

@@ -1,0 +1,69 @@
+"""Reusable straggler watchdog: robust moving-median step timing.
+
+Extracted from ``runtime.fault_tolerance.TrainDriver`` so the serve loop
+can run the *same* detector over its segment wall times: one class, two
+consumers (train step watchdog -> protective checkpoint; serve segment
+watchdog -> ``ServeResult.straggler_segments`` + the fault-injection
+harness's straggle assertions). Semantics are exactly the TrainDriver
+seed's — the extraction must not move the trigger point:
+
+- keep the last ``window`` observations;
+- flag nothing until ``min_samples`` observations exist (cold caches and
+  first-compile steps would all read as stragglers);
+- the reference is the **median of the window excluding the newest
+  sample** (a straggler must not dilute its own reference — with the
+  newest sample included, a 10x step against a flat history shifts the
+  median it is compared against);
+- ``dt > factor * median`` flags a straggler; ``streak_threshold``
+  consecutive flags additionally report *persistent* (the caller's cue
+  for a protective action — checkpoint, eviction, re-shard) and reset
+  the streak so one slow host triggers one action, not one per step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogVerdict:
+    straggler: bool              # this observation exceeded factor * median
+    persistent: bool             # streak_threshold consecutive stragglers
+    median: float                # the reference median (0.0 during warmup)
+
+
+class StragglerWatchdog:
+    """Moving-median straggler detector; see module docstring for the
+    exact trigger semantics (inherited unchanged from the TrainDriver)."""
+
+    def __init__(self, factor: float = 2.0, window: int = 32,
+                 min_samples: int = 8, streak_threshold: int = 3):
+        if window < 2 or min_samples < 2:
+            raise ValueError("watchdog needs >= 2 samples of history to "
+                             "form a median reference")
+        self.factor = float(factor)
+        self.window = int(window)
+        self.min_samples = int(min_samples)
+        self.streak_threshold = int(streak_threshold)
+        self.times: list[float] = []
+        self.events = 0              # total straggler observations
+        self._streak = 0
+
+    def observe(self, dt: float) -> WatchdogVerdict:
+        """Record one step/segment duration; returns the verdict."""
+        self.times.append(float(dt))
+        hist = self.times[-self.window:]
+        if len(hist) < self.min_samples:
+            return WatchdogVerdict(False, False, 0.0)
+        med = float(np.median(hist[:-1]))
+        if dt > self.factor * med:
+            self.events += 1
+            self._streak += 1
+            persistent = self._streak >= self.streak_threshold
+            if persistent:
+                self._streak = 0
+            return WatchdogVerdict(True, persistent, med)
+        self._streak = 0
+        return WatchdogVerdict(False, False, med)

@@ -233,6 +233,7 @@ def test_serve_recompile_count_bounded_and_donation_used():
     assert by_name["pow2-variant-contract"]["ok"], by_name
     assert by_name["serve-recompile-bound"]["ok"], by_name
     assert by_name["no-retrace-per-variant"]["ok"], by_name
+    assert by_name["preemption-no-retrace"]["ok"], by_name
     assert by_name["donation-used"]["ok"], by_name
     assert expected_variant_bound(8) == 5
 

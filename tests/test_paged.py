@@ -782,3 +782,112 @@ def test_ragged_q_capability_verdicts():
         for name, verdict in ATT.backend_reasons(spec).items():
             if name != "ita_onepass_pallas":
                 assert verdict is not True, (name, impl)
+
+
+# ---------------------------------------------------------------------------
+# Preemption / prefix-sharing seam (ISSUE 8): release-decrefs-not-frees
+# ---------------------------------------------------------------------------
+
+def test_preempt_readmit_evict_cycles_keep_invariants_seeded():
+    """Seeded property test over the serve loop's preemption cycle at
+    state level: admit (adopting registered prefixes), register + pin
+    full prompt pages, preempt (release a victim whose pages are pinned
+    — must decref, never free), ragged decode appends, re-admit adopting
+    the victim's pages back, and LRU-evict + unpin. After *every* op the
+    refcount partition holds (``check_invariants(pins)``) and no pinned
+    page sits on the free stack."""
+    from repro.attention import PrefixIndex
+
+    b, g, hd, page, cap = 3, 1, 4, 4, 16
+    prng = np.random.default_rng(13)
+    p = PagedKVState.init(b, cap, g, hd, page_size=page, num_pages=11)
+    index = PrefixIndex(page)
+    pins = {}
+    # three 2-page prompt families: adoption + re-adoption actually hit
+    fams = [prng.integers(0, 100, 2 * page).astype(np.int32)
+            for _ in range(3)]
+    tokens = [None] * b                  # host stream per row (like
+    adopted = [[] for _ in range(b)]     # slot_prompt / slot_shared)
+
+    def rand_kv(s):
+        return jnp.asarray(prng.integers(-127, 128, (b, s, g, hd)),
+                           jnp.int8)
+
+    def checked(op):
+        assert not bool(p.oversubscribed()), f"op {op}: pool overdrawn"
+        p.check_invariants(pins=pins)
+        free = set(np.asarray(p.free_stack)[:int(p.free_top)].tolist())
+        assert not free & set(pins), \
+            f"op {op}: pinned page on the free stack: {free & set(pins)}"
+
+    for op in range(160):
+        kind = int(prng.integers(0, 5))
+        live = [r for r in range(b) if tokens[r] is not None]
+        if kind == 0:                              # admit, adopting hits
+            free_rows = [r for r in range(b) if tokens[r] is None]
+            if not free_rows:
+                continue
+            row = int(prng.choice(free_rows))
+            fam = fams[int(prng.integers(len(fams)))]
+            tail = prng.integers(0, 100,
+                                 int(prng.integers(1, 8))).astype(np.int32)
+            stream = np.concatenate([fam, tail])
+            sh = index.lookup(stream, max_tokens=stream.size - 1)
+            rest = stream.size - len(sh) * page
+            need = -(-stream.size // page) - len(sh)
+            if need > int(p.free_top):
+                continue                           # admission would gate
+            if sh:
+                pad = np.full((1, p.pages_per_seq), -1, np.int32)
+                pad[0, :len(sh)] = sh
+                p = p.adopt_prefix(jnp.asarray([row]), jnp.asarray(pad),
+                                   jnp.asarray([len(sh)]),
+                                   jnp.asarray([len(sh) * page]))
+            n_new = np.zeros(b, np.int32)
+            n_new[row] = rest
+            p = p.append_chunk(rand_kv(rest), rand_kv(rest),
+                               jnp.asarray(n_new))
+            tokens[row], adopted[row] = stream, list(sh)
+        elif kind == 1 and live:                   # register + pin
+            row = int(prng.choice(live))
+            full = int(np.asarray(p.pos)[row]) // page
+            table = np.asarray(p.page_table)[row, :full]
+            got = index.register(tokens[row], table)
+            if got:
+                pins.update((pg, 1) for pg in got)
+                p = p.incref_pages(jnp.asarray(got, jnp.int32))
+        elif kind == 2 and live:                   # preempt a victim
+            row = int(prng.choice(live))
+            mask = np.zeros(b, bool)
+            mask[row] = True
+            p = p.release(jnp.asarray(mask))
+            tokens[row], adopted[row] = None, []
+        elif kind == 3 and live:                   # ragged decode append
+            row = int(prng.choice(live))
+            ln = int(np.asarray(p.pos)[row])
+            if ln >= cap or (ln % page == 0 and int(p.free_top) < 1):
+                continue
+            n_new = np.zeros(b, np.int32)
+            n_new[row] = 1
+            p = p.append_chunk(rand_kv(1), rand_kv(1), jnp.asarray(n_new))
+            tokens[row] = np.concatenate(
+                [tokens[row], prng.integers(0, 100, 1).astype(np.int32)])
+        elif kind == 4 and len(index):             # LRU evict + unpin
+            protected = {pg for lst in adopted for pg in lst}
+            evicted = index.evict_lru(int(prng.integers(1, 3)), protected)
+            for pg in evicted:
+                pins.pop(pg, None)
+            if evicted:
+                p = p.decref_pages(jnp.asarray(evicted, jnp.int32))
+        checked(op)
+    # drain: release everything, evict every pin -> the pool is whole
+    p = p.release(jnp.asarray([tokens[r] is not None for r in range(b)]))
+    tokens, adopted = [None] * b, [[] for _ in range(b)]
+    evicted = index.evict_lru(len(index))
+    for pg in evicted:
+        pins.pop(pg, None)
+    if evicted:
+        p = p.decref_pages(jnp.asarray(evicted, jnp.int32))
+    checked("drain")
+    assert not pins and int(p.free_top) == 10, \
+        "pages leaked through the preempt/pin cycle"

@@ -187,3 +187,70 @@ def test_compressed_psum_close_to_exact():
     ref = x.sum(0)
     np.testing.assert_allclose(np.asarray(out)[0], np.asarray(ref),
                                rtol=0.02, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Straggler watchdog: extracted detector + TrainDriver delegation (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_straggler_watchdog_trigger_semantics():
+    """The extracted detector keeps the TrainDriver seed's exact trigger
+    points: silent through warmup (even for a huge outlier), reference =
+    median of the window *excluding* the newest sample, persistent at
+    ``streak_threshold`` consecutive flags with the streak reset after."""
+    from repro.runtime.watchdog import StragglerWatchdog
+
+    wd = StragglerWatchdog(factor=2.0, window=8, min_samples=4,
+                           streak_threshold=3)
+    # warmup: < min_samples observations flag nothing, median reads 0
+    v = wd.observe(100.0)
+    assert (v.straggler, v.persistent, v.median) == (False, False, 0.0)
+    wd = StragglerWatchdog(factor=2.0, window=8, min_samples=4,
+                           streak_threshold=3)
+    for _ in range(6):
+        v = wd.observe(1.0)
+        assert not v.straggler
+    assert v.median == 1.0 and wd.events == 0
+    # 10x the median: flagged, persistent only on the 3rd consecutive
+    from repro.runtime.watchdog import WatchdogVerdict
+    assert wd.observe(10.0) == WatchdogVerdict(True, False, 1.0)
+    v = wd.observe(10.0)
+    assert v.straggler and not v.persistent
+    v = wd.observe(10.0)
+    assert v.straggler and v.persistent          # streak hits 3 -> fires
+    v = wd.observe(10.0)
+    assert v.straggler and not v.persistent      # streak was reset
+    assert wd.events == 4
+    # a normal sample resets the streak entirely
+    assert not wd.observe(1.0).straggler
+    v = wd.observe(50.0)
+    assert v.straggler and not v.persistent
+
+
+def test_straggler_watchdog_rejects_degenerate_history():
+    from repro.runtime.watchdog import StragglerWatchdog
+
+    with pytest.raises(ValueError, match="history"):
+        StragglerWatchdog(window=1)
+    with pytest.raises(ValueError, match="history"):
+        StragglerWatchdog(min_samples=1)
+
+
+def test_train_driver_delegates_to_shared_watchdog(tmp_path):
+    """TrainDriver's step timing is the shared StragglerWatchdog — same
+    list object (``step_times``), same event counter — so the serve
+    loop's segment watchdog and the train watchdog cannot drift apart."""
+    from repro.runtime.watchdog import StragglerWatchdog
+
+    drv = TrainDriver(FTConfig(ckpt_dir=str(tmp_path / "wd"),
+                               straggler_factor=3.0),
+                      None, None, None, None)
+    assert isinstance(drv.wd, StragglerWatchdog)
+    assert drv.wd.factor == 3.0
+    assert drv.step_times is drv.wd.times        # shared in place
+    for _ in range(8):
+        drv._watchdog(0.01)
+    assert drv.straggler_events == 0
+    drv._watchdog(1.0)           # 100x median: one event, streak 1 only
+    assert drv.straggler_events == 1
+    assert len(drv.step_times) == 9

@@ -493,6 +493,187 @@ def test_serve_rejects_unservable_requests_and_configs():
 
 
 # ---------------------------------------------------------------------------
+# Overload survival: preemption, SLO classes, fault injection (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def _overload_trace(cfg, prng, n=6, plen_lo=110, plen_hi=141, gen_lo=10,
+                    gen_hi=17):
+    """Two-page requests against an undersized pool: four low-class
+    requests arrive first and saturate the pool, two high-class requests
+    arrive while they are mid-flight — admission must preempt."""
+    reqs = []
+    for i in range(n):
+        plen = int(prng.integers(plen_lo, plen_hi))
+        reqs.append(ServeRequest(
+            prompt=prng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+            gen=int(prng.integers(gen_lo, gen_hi)), arrival=2 * i,
+            priority=1 if i >= n - 2 else 0))
+    return reqs
+
+
+OVERLOAD_KW = dict(slots=3, segment=4, max_len=256, page_size=128,
+                   num_pages=5, admission="chunked", chunk_size=48,
+                   preemption=True, debug_invariants=True)
+
+
+@pytest.mark.parametrize("cfg,plen_hi,gen_hi", [
+    (CFG, 141, 17),       # causal GQA
+    (CFG_SWA, 129, 16),   # sliding window: plen + gen <= window (144) so
+                          # a resumed prompt (prompt + generated prefix)
+                          # never exceeds what swa prefill can serve
+])
+def test_preemption_resume_bit_exact_vs_solo(cfg, plen_hi, gen_hi):
+    """The ISSUE-8 parity sweep: page-pressure preemption evicts live
+    low-class victims mid-stream; every request — including every
+    preempted-and-resumed one — still gets tokens bit-identical to solo
+    ``generate()``, with allocator invariants checked every round."""
+    params = _params(cfg)
+    prng = np.random.default_rng(17)
+    reqs = _overload_trace(cfg, prng, plen_hi=plen_hi, gen_hi=gen_hi)
+    res = serve_continuous(params, cfg, reqs, **OVERLOAD_KW)
+    assert len(res.completed) == len(reqs)
+    assert res.preemptions >= 1
+    preempted = {c.index for c in res.completed if c.preemptions}
+    assert preempted, "no request was actually evicted and resumed"
+    # victims are strictly lower class than the candidate that evicted
+    assert all(reqs[i].priority == 0 for i in preempted)
+    for c in res.completed:
+        r = reqs[c.index]
+        solo = generate(params, cfg, jnp.asarray(r.prompt)[None], r.gen,
+                        max_len=256)
+        np.testing.assert_array_equal(
+            np.asarray(c.tokens), np.asarray(solo.tokens)[0],
+            err_msg=f"request {c.index} "
+                    f"({'preempted' if c.index in preempted else 'clean'}) "
+                    f"diverged from solo generation")
+    # SLO steering: the high class is admitted ahead of the backlog
+    cs = res.class_summary()
+    assert set(cs) == {0, 1}
+    assert cs[0]["preemptions"] == res.preemptions and \
+        cs[1]["preemptions"] == 0
+    assert cs[1]["p95_admit_delay_steps"] < cs[0]["p95_admit_delay_steps"]
+
+
+def test_preemption_sampled_resume_bit_exact():
+    """Sampled overload serving: a victim's PRNG stream is snapshotted at
+    eviction and restored at re-admission, so its draws are bit-identical
+    to solo generation with the fold_in key — as if never preempted."""
+    params = _params()
+    prng = np.random.default_rng(17)
+    reqs = _overload_trace(CFG, prng)
+    key = jax.random.PRNGKey(42)
+    res = serve_continuous(params, CFG, reqs, temperature=0.8, key=key,
+                           **OVERLOAD_KW)
+    assert len(res.completed) == len(reqs)
+    assert res.preemptions >= 1
+    assert any(c.preemptions for c in res.completed)
+    for c in res.completed:
+        r = reqs[c.index]
+        solo = generate(params, CFG, jnp.asarray(r.prompt)[None], r.gen,
+                        max_len=256, temperature=0.8,
+                        key=jax.random.fold_in(key, c.index))
+        np.testing.assert_array_equal(
+            np.asarray(c.tokens), np.asarray(solo.tokens)[0],
+            err_msg=f"request {c.index} ({c.preemptions} preemptions) "
+                    f"diverged from solo fold_in generation")
+
+
+def test_preemption_with_prefix_sharing_decrefs_not_frees():
+    """The preemption / prefix-sharing seam: victims whose prompt pages
+    are registered (pinned) in the index release their rows, which must
+    *decref* the pinned pages, not free them — the resumed admission then
+    adopts them back. Invariants (refcount = table refs + pins) are
+    host-checked after every round; outputs stay bit-exact."""
+    params = _params()
+    prng = np.random.default_rng(31)
+    # one shared 128-token family for the low class: its first page gets
+    # registered + pinned before the high-class arrivals force eviction
+    fam = prng.integers(0, CFG.vocab_size, 128).astype(np.int32)
+    reqs = []
+    for i in range(6):
+        if i < 4:
+            tail = prng.integers(0, CFG.vocab_size,
+                                 int(prng.integers(4, 13))).astype(np.int32)
+            p, prio = np.concatenate([fam, tail]), 0
+        else:
+            p, prio = prng.integers(0, CFG.vocab_size,
+                                    130 + i).astype(np.int32), 1
+        reqs.append(ServeRequest(prompt=p, gen=int(prng.integers(10, 17)),
+                                 arrival=2 * i, priority=prio))
+    kw = dict(OVERLOAD_KW, num_pages=6, prefix_sharing=True)
+    res = serve_continuous(params, CFG, reqs, **kw)
+    assert len(res.completed) == len(reqs)
+    assert res.preemptions >= 1
+    assert res.prefix_hits >= 1
+    for c in res.completed:
+        r = reqs[c.index]
+        solo = generate(params, CFG, jnp.asarray(r.prompt)[None], r.gen,
+                        max_len=256)
+        np.testing.assert_array_equal(
+            np.asarray(c.tokens), np.asarray(solo.tokens)[0],
+            err_msg=f"request {c.index}")
+
+
+def test_fault_injection_kill_mid_prompt_and_straggler():
+    """Seeded fault harness: a forced slot kill lands while the victim is
+    still mid-prompt-chunk (zero tokens emitted — it resumes its original
+    prompt from scratch), a phantom page-pressure spike delays one
+    admission round, and an injected sleep is flagged by the segment
+    watchdog. All recovery paths keep outputs bit-identical to solo."""
+    from repro.runtime.fault_tolerance import ServeFaultPlan
+
+    params = _params()
+    prng = np.random.default_rng(7)
+    # prompt long enough (200 tokens, chunk 16, segment 4 -> 64
+    # prefill tokens per segment) that step-4's kill is mid-prompt
+    reqs = [
+        ServeRequest(prompt=prng.integers(0, CFG.vocab_size,
+                                          200).astype(np.int32),
+                     gen=32, arrival=0),
+        ServeRequest(prompt=prng.integers(0, CFG.vocab_size,
+                                          40).astype(np.int32),
+                     gen=24, arrival=8),
+    ]
+    plan = ServeFaultPlan(seed=3, kill_steps=(4,), pressure_steps=(8,),
+                          pressure_pages=4, straggle_steps=(40,),
+                          straggle_s=0.25)
+    res = serve_continuous(params, CFG, reqs, slots=2, segment=4,
+                           max_len=256, page_size=128,
+                           admission="chunked", chunk_size=16,
+                           faults=plan, debug_invariants=True)
+    assert len(res.completed) == len(reqs)
+    assert res.preemptions >= 1
+    killed = {c.index: c.preemptions for c in res.completed}
+    assert killed[0] >= 1, "the step-4 kill must hit the mid-prompt slot"
+    assert res.straggler_segments >= 1, \
+        "the injected 250 ms sleep was not flagged by the watchdog"
+    for c in res.completed:
+        r = reqs[c.index]
+        solo = generate(params, CFG, jnp.asarray(r.prompt)[None], r.gen,
+                        max_len=256)
+        np.testing.assert_array_equal(
+            np.asarray(c.tokens), np.asarray(solo.tokens)[0],
+            err_msg=f"request {c.index}")
+
+
+def test_preemption_and_faults_require_chunked_admission():
+    """Victims resume through chunked re-prefill of prompt + generated
+    prefix; the stall path has no such seam."""
+    from repro.runtime.fault_tolerance import ServeFaultPlan
+
+    params = _params()
+    reqs = [ServeRequest(prompt=np.zeros(4, np.int32), gen=2)]
+    with pytest.raises(ValueError, match="chunked"):
+        serve_continuous(params, CFG, reqs, slots=2, segment=4,
+                         max_len=MAX_LEN, admission="stall",
+                         preemption=True)
+    with pytest.raises(ValueError, match="chunked"):
+        serve_continuous(params, CFG, reqs, slots=2, segment=4,
+                         max_len=MAX_LEN, admission="stall",
+                         faults=ServeFaultPlan(kill_steps=(1,)))
+
+
+# ---------------------------------------------------------------------------
 # Paged generate(): ring parity + caches= validation
 # ---------------------------------------------------------------------------
 
