@@ -758,14 +758,21 @@ class PrefixIndex:
         return list(self._page_key)
 
     def _chain_keys(self, tokens, n_chunks: int):
+        # blake2b, not Python hash(): hash() is salted per process, and
+        # the index must survive a server restart (snapshot/restore) —
+        # the same prompt must map to the same chain keys in the new
+        # process or every restored entry would be unreachable
+        import hashlib
+
         import numpy as np
         toks = np.ascontiguousarray(np.asarray(tokens, np.int64).reshape(-1))
-        prev = self.page_size                     # chain seed
+        prev = b"prefix-chain-v1:%d" % self.page_size   # chain seed
         keys = []
         for j in range(n_chunks):
             chunk = toks[j * self.page_size:(j + 1) * self.page_size]
-            prev = hash((prev, chunk.tobytes()))
-            keys.append(prev)
+            prev = hashlib.blake2b(prev + chunk.tobytes(),
+                                   digest_size=16).digest()
+            keys.append(prev.hex())
         return keys
 
     def lookup(self, tokens, max_tokens: int | None = None):
@@ -810,6 +817,34 @@ class PrefixIndex:
             self._page_key[page] = key
             new.append(page)
         return new
+
+    # -- persistence ------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot. Entries are listed oldest-first
+        (dict insertion order *is* the LRU order), so a round trip
+        preserves eviction behaviour exactly."""
+        return {
+            "page_size": self.page_size,
+            "entries": [[key, int(page)]
+                        for key, page in self._entries.items()],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Rebuild the index from ``state_dict()`` output. The chain keys
+        are deterministic blake2b digests, so entries written by a dead
+        process resolve the same prompts here. Raises ``ValueError`` on a
+        page-size mismatch (the chain seed, and therefore every key,
+        depends on it)."""
+        if int(state["page_size"]) != self.page_size:
+            raise ValueError(
+                f"prefix index snapshot has page_size "
+                f"{state['page_size']}, pool uses {self.page_size}")
+        self._entries = {}
+        self._page_key = {}
+        for key, page in state["entries"]:
+            self._entries[str(key)] = int(page)
+            self._page_key[int(page)] = str(key)
 
     def evict_lru(self, n: int, protected=frozenset()):
         """Drop up to ``n`` least-recently-used entries whose page is not

@@ -3,7 +3,8 @@
 Layout (one directory per step):
 
     <dir>/step_000123/
-        meta.json            step, pytree structure, shapes/dtypes
+        meta.json            step, pytree structure, shapes/dtypes,
+                             format version, per-leaf crc32 checksums
         leaf_00000.npy ...   one file per pytree leaf
 
 Design points for the 1000+ node posture:
@@ -17,6 +18,16 @@ Design points for the 1000+ node posture:
   background thread; the train loop is blocked only for the transfer.
 - **Atomicity**: written into ``.tmp`` and renamed, so a crash mid-write
   never corrupts the latest checkpoint (restart-safe).
+- **Integrity**: every leaf's crc32 is recorded in ``meta.json`` and
+  re-verified on restore (``verify=True``); a bit-rotted or truncated
+  leaf, a missing file, or a format-version bump raises
+  ``CheckpointCorrupt`` — callers that can rebuild the state from a
+  different source (e.g. the serve journal) catch it and degrade to a
+  cold start instead of loading wrong bytes.
+- **Namespaces**: ``prefix`` separates checkpoint families inside one
+  directory — training uses the default ``step_%08d``; the serving
+  snapshots use ``serve_%08d`` indexed by snapshot ordinal, not a train
+  step — each family rotates (``keep``) independently.
 """
 
 from __future__ import annotations
@@ -25,20 +36,37 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import numpy as np
 
+FORMAT_VERSION = 2
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed verification: checksum mismatch, missing or
+    truncated leaf, or an incompatible format version. Restoring would
+    hand back wrong bytes, so the restore refuses instead."""
+
+
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).data)
+
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3, prefix: str = "step"):
         self.dir = directory
         self.keep = keep
+        self.prefix = prefix
         os.makedirs(directory, exist_ok=True)
         self._pool = ThreadPoolExecutor(max_workers=2)
         self._pending = None
         self._lock = threading.Lock()
+
+    def _dirname(self, step: int) -> str:
+        return os.path.join(self.dir, f"{self.prefix}_{step:08d}")
 
     # -- save ---------------------------------------------------------------
 
@@ -46,31 +74,43 @@ class Checkpointer:
              blocking: bool = False):
         """Snapshot ``tree`` (any pytree of jax/np arrays) at ``step``."""
         leaves, treedef = jax.tree.flatten(tree)
-        host_leaves = [np.asarray(l) for l in leaves]       # device->host
+        # np.array (not asarray): on the CPU backend asarray can alias
+        # the device buffer zero-copy, and a caller that donates the
+        # tree to its next dispatch (the serve loop donates its caches
+        # every segment) would mutate the bytes between the checksum
+        # below and the background write — a copy pins this call's view
+        host_leaves = [np.array(l) for l in leaves]         # device->host
         meta = {
+            "format_version": FORMAT_VERSION,
             "step": step,
             "treedef": str(treedef),
             "n_leaves": len(leaves),
             "extra": extra or {},
             "shapes": [list(l.shape) for l in host_leaves],
             "dtypes": [str(l.dtype) for l in host_leaves],
+            "checksums": [_crc32(l) for l in host_leaves],
         }
-        fut = self._pool.submit(self._write, step, host_leaves, meta)
+        # serialize meta NOW, on the caller: ``extra`` may hold live
+        # bookkeeping dicts (the serve loop's prefix index / pin ledger)
+        # that keep mutating after save() returns — encoding on the
+        # background thread would snapshot a racy future state of them
+        meta_json = json.dumps(meta)
+        fut = self._pool.submit(self._write, step, host_leaves, meta_json)
         with self._lock:
             self._pending = fut
         if blocking:
             fut.result()
         return fut
 
-    def _write(self, step, host_leaves, meta):
-        final = os.path.join(self.dir, f"step_{step:08d}")
+    def _write(self, step, host_leaves, meta_json):
+        final = self._dirname(step)
         tmp = f"{final}.{os.getpid()}.{threading.get_ident()}.tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         for i, leaf in enumerate(host_leaves):
             np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
+            f.write(meta_json)
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
         self._gc()
@@ -85,16 +125,16 @@ class Checkpointer:
     def _gc(self):
         steps = sorted(self.all_steps())
         for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+            shutil.rmtree(self._dirname(s), ignore_errors=True)
 
     # -- restore --------------------------------------------------------------
 
     def all_steps(self):
         out = []
+        want = self.prefix + "_"
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name.split("_")[1].split(".")[0]))
+            if name.startswith(want) and not name.endswith(".tmp"):
+                out.append(int(name[len(want):].split(".")[0]))
         return sorted(out)
 
     def latest_step(self):
@@ -102,25 +142,58 @@ class Checkpointer:
         return steps[-1] if steps else None
 
     def restore(self, template, step: int | None = None,
-                shardings=None) -> tuple:
+                shardings=None, verify: bool = True) -> tuple:
         """Restore into the structure of ``template``; re-shard with
         ``shardings`` (pytree of NamedSharding) when given — this is the
-        elastic-restart path onto a different mesh."""
+        elastic-restart path onto a different mesh. ``verify`` re-checks
+        every leaf's crc32 against ``meta.json`` (v2 checkpoints) and
+        raises ``CheckpointCorrupt`` on any mismatch."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
+        path = self._dirname(step)
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorrupt(f"{path}: unreadable meta.json: {e}")
+        version = meta.get("format_version", 1)
+        if version > FORMAT_VERSION:
+            raise CheckpointCorrupt(
+                f"{path}: format version {version} is newer than this "
+                f"reader ({FORMAT_VERSION})")
         leaves, treedef = jax.tree.flatten(template)
-        assert len(leaves) == meta["n_leaves"], "pytree structure changed"
+        if len(leaves) != meta["n_leaves"]:
+            raise CheckpointCorrupt(
+                f"{path}: pytree structure changed "
+                f"({len(leaves)} leaves vs {meta['n_leaves']} on disk)")
+        checksums = meta.get("checksums")
         out = []
         shard_leaves = (jax.tree.leaves(shardings)
                         if shardings is not None else [None] * len(leaves))
         for i, (tmpl, sh) in enumerate(zip(leaves, shard_leaves, strict=True)):
-            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            leaf_path = os.path.join(path, f"leaf_{i:05d}.npy")
+            try:
+                arr = np.load(leaf_path)
+            except (OSError, ValueError) as e:
+                raise CheckpointCorrupt(f"{leaf_path}: unreadable: {e}")
+            if verify and checksums is not None:
+                got = _crc32(arr)
+                if got != checksums[i]:
+                    raise CheckpointCorrupt(
+                        f"{leaf_path}: crc32 {got:#010x} != recorded "
+                        f"{checksums[i]:#010x}")
+            # copy=True is load-bearing: on the CPU backend a plain
+            # asarray/device_put can zero-copy alias the numpy buffer
+            # np.load handed us, and callers feed restored leaves into
+            # donating jitted functions (the serve restore releases
+            # slots in place) — donation of an aliased buffer leaves
+            # XLA and numpy each believing they own it (observed as
+            # heap corruption + garbage leaf contents under the
+            # persistent compilation cache's fast dispatch)
+            owned = jax.numpy.array(arr, copy=True)
             if sh is not None:
-                out.append(jax.device_put(arr, sh))
+                out.append(jax.device_put(owned, sh))
             else:
-                out.append(jax.numpy.asarray(arr))
+                out.append(owned)
         return jax.tree.unflatten(treedef, out), meta

@@ -123,6 +123,34 @@ def main():
     ap.add_argument("--overload", type=float, default=1.0,
                     help="multiply --rate by this factor (arrival rate > "
                          "service rate exercises --preemption; 1 = off)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="write-ahead request journal + snapshots here "
+                         "(--continuous): admissions, per-segment token "
+                         "high-water marks and completions are journaled "
+                         "at every segment boundary (group commit, "
+                         "bounded fsync lag), so a crashed serve can be "
+                         "resumed bit-identically with --resume")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot the paged pool + prefix index every N "
+                         "segments into <journal-dir>/snapshots (0 = off); "
+                         "a usable snapshot warm-starts --resume, a "
+                         "corrupt one degrades to cold-start from the "
+                         "journal")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay <journal-dir>/journal.jsonl before "
+                         "serving: finished requests return without being "
+                         "served twice, unfinished ones resume from their "
+                         "last journaled boundary (bit-identical tokens)")
+    ap.add_argument("--drain-timeout", type=float, default=None,
+                    help="on SIGTERM (or Ctrl-C posing as one), stop "
+                         "admitting and let in-flight requests finish; "
+                         "after this many seconds stop at the next segment "
+                         "boundary with progress journaled for --resume")
+    ap.add_argument("--aging-steps", type=int, default=None,
+                    help="starvation aging for --priority-classes: a "
+                         "waiting request's effective class grows by one "
+                         "every N virtual steps (bounded worst-case "
+                         "admission delay for the low class)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke,
@@ -158,6 +186,14 @@ def main():
                 arrival=int(t),
                 priority=int(rng.integers(0, max(1, args.priority_classes)))
             ) for t in arrivals]
+            drain = None
+            if args.journal_dir is not None:
+                import signal
+
+                from repro.runtime.journal import ServeDrain
+                drain = ServeDrain()
+                signal.signal(signal.SIGTERM,
+                              lambda *_: drain.request())
             res = serve_continuous(
                 params, cfg, reqs, slots=args.batch, segment=args.segment,
                 max_len=args.system_prompt_len + args.prompt_len + args.gen,
@@ -166,7 +202,11 @@ def main():
                 eos_id=args.eos_id, admission=args.admission,
                 chunk_size=args.chunk_size, token_budget=args.token_budget,
                 prefix_sharing=args.prefix_sharing,
-                preemption=args.preemption)
+                preemption=args.preemption,
+                journal_dir=args.journal_dir,
+                snapshot_every=args.snapshot_every, resume=args.resume,
+                drain=drain, drain_timeout=args.drain_timeout,
+                aging_steps=args.aging_steps)
         util = max((u for _, u in res.page_util), default=0.0)
         print(f"[serve] arch={cfg.name} continuous slots={args.batch} "
               f"segment={args.segment} page_size={args.page_size} "
@@ -189,15 +229,27 @@ def main():
                   f"({res.prefix_hit_rate:.0%}), "
                   f"{res.shared_prefix_tokens} prompt tokens adopted "
                   f"from shared pages ({res.prefill_tokens} prefilled)")
+        if args.journal_dir is not None:
+            n_rep = sum(1 for c in res.completed if c.replayed)
+            print(f"[serve] journal: dir={args.journal_dir} "
+                  f"recovered={res.recovered} "
+                  f"snapshot_restore={res.restored_from_snapshot} "
+                  f"replayed {n_rep} requests / {res.replayed_tokens} "
+                  f"tokens, recovery {res.recovery_s*1e3:.0f} ms, "
+                  f"snapshot {res.snapshot_bytes/2**20:.1f} MiB"
+                  + (" [drained]" if res.drained else ""))
         if args.preemption or args.priority_classes > 1:
             print(f"[serve] preemptions: {res.preemptions}")
             for prio in sorted(res.class_summary(), reverse=True):
                 d = res.class_summary()[prio]
+                aging = (f", aging bound {d['aging_bound_steps']} steps"
+                         if "aging_bound_steps" in d else "")
                 print(f"[serve]   class {prio}: {d['n']} requests, "
                       f"{d['preemptions']} preemptions, p95 TTFT "
                       f"{d['p95_ttft_s']*1e3:.0f} ms, p95 latency "
                       f"{d['p95_latency_s']*1e3:.0f} ms, p95 admission "
-                      f"delay {d['p95_admit_delay_steps']} steps")
+                      f"delay {d['p95_admit_delay_steps']} steps, max "
+                      f"{d['max_admit_delay_steps']}{aging}")
         return
 
     with mesh, use_hints(mesh):

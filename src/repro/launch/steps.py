@@ -261,6 +261,24 @@ jax.tree_util.register_dataclass(
     meta_fields=())
 
 
+def aged_priority(prio: int, waited: int, aging_steps: int | None,
+                  max_class: int) -> int:
+    """Starvation aging (host scheduler helper): a waiting request's
+    effective SLO class grows by one every ``aging_steps`` virtual steps,
+    capped at ``max_class + 1`` — one above the trace's highest real
+    class, so a fully aged request outranks *every* fresh arrival but
+    capped requests tie with each other (FIFO within the cap) and can
+    never be preemption victims of one another. The cap is what bounds
+    the worst-case admission delay: a class-``c`` request reaches the
+    cap after ``aging_steps * (max_class + 1 - c)`` steps of waiting
+    (``ServeResult.class_summary()['aging_bound_steps']``). ``None`` or
+    non-positive ``aging_steps`` disables aging (identity on ``prio``)."""
+    if aging_steps is None or aging_steps <= 0:
+        return prio
+    return min(prio + max(int(waited), 0) // int(aging_steps),
+               max_class + 1)
+
+
 @jax.jit
 def fold_keys(key, ids):
     """One PRNG stream per id: ``fold_in(key, ids[i])`` — request-id

@@ -47,6 +47,19 @@ class FTConfig:
 # Serve-loop fault injection (the serving analogue of inject_failure_at)
 # ---------------------------------------------------------------------------
 
+class SimulatedCrash(RuntimeError):
+    """Raised by ``serve_continuous`` at an injected crash point: the
+    process "dies" with whatever the journal has durably recorded — all
+    in-memory serve state (slots, pool, prefix index, pending queue) is
+    abandoned exactly as a SIGKILL would abandon it. The recovery
+    harness catches it and restarts with ``resume=True``."""
+
+    def __init__(self, step: int, where: str):
+        super().__init__(f"simulated crash at step {step} ({where})")
+        self.step = step
+        self.where = where
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeFaultPlan:
     """Seeded fault-injection plan for ``serve_continuous``: which faults
@@ -68,6 +81,16 @@ class ServeFaultPlan:
     - **stragglers**: sleep ``straggle_s`` before a segment dispatch so
       the segment watchdog (the shared ``StragglerWatchdog``) sees a
       genuine outlier.
+    - **crashes**: raise ``SimulatedCrash`` — process death, not
+      preemption. ``crash_steps`` fires at the *top* of the first
+      scheduling round at or past the listed step (an admission-round
+      boundary: everything through the previous segment is journaled);
+      ``crash_after_steps`` fires *after* the segment's device work and
+      readback but **before** the journal flush (the mid-segment torn
+      window: the device produced tokens the journal never saw, and
+      recovery must regenerate them bit-identically). Each listed step
+      fires once per injector — the restarted serve builds a fresh
+      injector whose lists exclude already-fired points.
     """
 
     seed: int = 0
@@ -79,10 +102,16 @@ class ServeFaultPlan:
     straggle_prob: float = 0.0
     straggle_s: float = 0.0
     straggle_steps: tuple = ()
+    crash_steps: tuple = ()
+    crash_after_steps: tuple = ()
 
     @property
     def may_kill(self) -> bool:
         return self.kill_prob > 0.0 or bool(self.kill_steps)
+
+    @property
+    def may_crash(self) -> bool:
+        return bool(self.crash_steps) or bool(self.crash_after_steps)
 
 
 class ServeFaultInjector:
@@ -97,9 +126,12 @@ class ServeFaultInjector:
         self._kills = sorted(plan.kill_steps)
         self._pressure = sorted(plan.pressure_steps)
         self._straggles = sorted(plan.straggle_steps)
+        self._crashes = sorted(plan.crash_steps)
+        self._crashes_after = sorted(plan.crash_after_steps)
         self.kills_requested = 0
         self.pressure_events = 0
         self.straggle_events = 0
+        self.crashes_fired = 0
 
     @staticmethod
     def _due(pending: list, step: int) -> bool:
@@ -127,6 +159,20 @@ class ServeFaultInjector:
             return 0
         self.pressure_events += 1
         return int(self.plan.pressure_pages)
+
+    def want_crash(self, step: int) -> bool:
+        """True when a round-boundary crash is due (raise before any of
+        this round's admission or journal writes)."""
+        hit = self._due(self._crashes, step)
+        self.crashes_fired += hit
+        return hit
+
+    def want_crash_after(self, step: int) -> bool:
+        """True when a mid-segment crash is due (raise after the segment
+        readback, before the journal flush — the torn-write window)."""
+        hit = self._due(self._crashes_after, step)
+        self.crashes_fired += hit
+        return hit
 
     def straggle(self, step: int) -> float:
         """Seconds to stall before the next segment dispatch."""

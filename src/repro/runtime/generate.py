@@ -307,11 +307,16 @@ class ServeRequest:
     generated tokens including the one sampled from prefill.
     ``priority`` is the request's SLO class (higher = more urgent): it
     orders admission, steers the mixed segments' prompt-chunk budget and
-    selects preemption victims (strictly lower classes only)."""
+    selects preemption victims (strictly lower classes only).
+    ``request_id`` is a stable identity for journaling: re-submitting
+    the same id after a crash recovery dedupes against the journal (a
+    completed request replays instead of serving twice). Defaults to
+    ``req-<trace index>`` when unset; ids must be unique per trace."""
     prompt: Any                      # (S,) int32 token ids
     gen: int
     arrival: int = 0
     priority: int = 0
+    request_id: str | None = None
 
 
 @dataclasses.dataclass
@@ -326,6 +331,7 @@ class CompletedRequest:
     first_token_s: float = 0.0       # wall-clock of the first emitted token
     priority: int = 0                # the request's SLO class
     preemptions: int = 0             # times this request was evicted
+    replayed: bool = False           # rebuilt from the journal, not served
 
     @property
     def latency_s(self) -> float:
@@ -352,6 +358,14 @@ class ServeResult:
     prefix_hits: int = 0             # admissions that adopted >= 1 page
     preemptions: int = 0             # victim evictions (incl. fault kills)
     straggler_segments: int = 0      # segments the watchdog flagged slow
+    drained: bool = False            # graceful drain cut the serve short
+    recovered: bool = False          # this serve resumed from a journal
+    restored_from_snapshot: bool = False   # warm pool/index restore hit
+    replayed_tokens: int = 0         # tokens recovered from the journal
+    snapshot_bytes: int = 0          # last snapshot's on-disk leaf bytes
+    recovery_s: float = 0.0          # wall spent in replay + restore
+    aging_steps: int | None = None   # starvation-aging period (None = off)
+    max_class: int = 0               # highest SLO class in the trace
 
     @property
     def total_tokens(self) -> int:
@@ -399,7 +413,12 @@ class ServeResult:
 
     def class_summary(self) -> dict:
         """Per-SLO-class accounting: count, total preemptions suffered,
-        and p95 TTFT / latency / admission delay."""
+        p95 TTFT / latency / admission delay, the worst admission delay
+        actually suffered, and — when starvation aging is on — the
+        class's ``aging_bound_steps``: the virtual-step horizon at which
+        a waiting request of this class reaches the priority cap and can
+        no longer be overtaken by any newly arrived class (the aging
+        guarantee property-tested in tests)."""
         out = {}
         for c in self.completed:
             d = out.setdefault(c.priority, {"n": 0, "preemptions": 0})
@@ -410,6 +429,12 @@ class ServeResult:
             d["p95_latency_s"] = self.latency_quantile(0.95, priority=prio)
             d["p95_admit_delay_steps"] = self.admission_delay_quantile(
                 0.95, priority=prio)
+            d["max_admit_delay_steps"] = max(
+                (c.admitted_step - c.arrival for c in self._of_class(prio)),
+                default=0)
+            if self.aging_steps is not None:
+                d["aging_bound_steps"] = self.aging_steps * (
+                    self.max_class + 1 - prio)
         return out
 
 
@@ -602,7 +627,10 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                      preemption: bool = False, faults=None,
                      straggler_factor: float = 2.0,
                      debug_invariants: bool | None = None,
-                     audit=None) -> ServeResult:
+                     audit=None, journal_dir: str | None = None,
+                     snapshot_every: int = 0, resume: bool = False,
+                     drain=None, drain_timeout: float | None = None,
+                     aging_steps: int | None = None) -> ServeResult:
     """Serve an arrival trace with continuous batching over a paged pool.
 
     A fixed-slot batch (``slots`` wide) runs fused ``lax.scan`` segments
@@ -688,6 +716,31 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     allocator partition + refcount invariants after every admission
     round.
 
+    **Crash safety** (DESIGN.md §Crash recovery): ``journal_dir``
+    enables a write-ahead request journal (``runtime.journal``) —
+    admissions, per-request emitted-token high-water marks and PRNG key
+    snapshots flushed at every segment boundary, completions — plus,
+    with ``snapshot_every=N``, a ``Checkpointer`` snapshot of the paged
+    pool + prefix index every N segments. ``resume=True`` replays the
+    journal first: completed requests (matched by
+    ``ServeRequest.request_id``) return as replayed
+    ``CompletedRequest``s without serving twice, and every unfinished
+    request is rebuilt as a pending ``prompt ++ emitted`` stream with
+    its journaled key snapshot and re-admitted through the ordinary
+    preemption-resume path — greedy *and* sampled tokens bit-identical
+    to a never-crashed serve. A usable snapshot (checksums, version and
+    geometry verified; post-restore allocator invariants checked) warm-
+    starts the prefix index so shared prompts skip re-prefilling; any
+    snapshot problem degrades to a cold start from the journal alone —
+    never to wrong tokens. ``drain`` (a ``journal.ServeDrain``) stops
+    admission and finishes in-flight work — or, past ``drain_timeout``
+    seconds, stops at the next boundary with progress journaled — then
+    takes a final snapshot. ``aging_steps`` turns on starvation aging:
+    a waiting request's effective class grows by one every
+    ``aging_steps`` virtual steps, capped one above the trace's highest
+    class, giving the low class a *bounded* worst-case admission delay
+    (``class_summary()['aging_bound_steps']``).
+
     Requests decode greedily (or with temperature sampling when ``key``
     is given) until ``gen`` tokens or ``eos_id``. Greedy serving is
     bit-identical to generating each request alone under **both**
@@ -700,8 +753,8 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     Returns ``ServeResult`` with per-request latency/TTFT and page-pool
     utilization samples.
     """
-    from repro.launch.steps import ServeSlotState, fold_keys, \
-        sample_token_rows
+    from repro.launch.steps import ServeSlotState, aged_priority, \
+        fold_keys, sample_token_rows
     from repro.models import init_caches
 
     if admission not in ADMISSIONS:
@@ -718,7 +771,8 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         return ServeResult([], 0.0, 0, 0, 0, [])
     injector = None
     if faults is not None:
-        from repro.runtime.fault_tolerance import ServeFaultInjector
+        from repro.runtime.fault_tolerance import (ServeFaultInjector,
+                                                   SimulatedCrash)
         injector = ServeFaultInjector(faults)
     from repro.runtime.watchdog import StragglerWatchdog
     watchdog = StragglerWatchdog(factor=straggler_factor)
@@ -749,7 +803,121 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     prio_req = [int(getattr(r, "priority", 0)) for r in requests]
     resumable = [int(np.asarray(r.prompt).size) + r.gen <= capacity
                  for r in requests]
-    if may_preempt:
+    max_class = max(prio_req, default=0)
+    if aging_steps is not None and aging_steps <= 0:
+        raise ValueError(f"aging_steps={aging_steps} must be positive")
+
+    def eff_prio(i, at_step):
+        return aged_priority(prio_req[i],
+                             at_step - requests[i].arrival,
+                             aging_steps, max_class)
+
+    # -- write-ahead journal + replay (DESIGN.md §Crash recovery) --------
+    journal = None
+    fingerprint = None
+    seed_emitted = {}                  # index -> journaled emitted tokens
+    seed_keys = {}                     # index -> journaled PRNG snapshot
+    replayed_completed = []            # CompletedRequest rebuilt, not served
+    done_replayed = set()
+    replayed_tokens = 0
+    recovered = False
+    recovery_s = 0.0
+    rids = [r.request_id if r.request_id is not None else f"req-{i:06d}"
+            for i, r in enumerate(requests)]
+    if len(set(rids)) != len(rids):
+        dup = sorted({r for r in rids if rids.count(r) > 1})
+        raise ValueError(f"duplicate request_id(s): {dup} — journal "
+                         f"dedupe needs ids unique per trace")
+    if journal_dir is not None:
+        from repro.runtime.journal import (ServeJournal, check_fingerprint,
+                                           prompt_digest)
+        t_rec = time.perf_counter()
+        os.makedirs(journal_dir, exist_ok=True)
+        jpath = os.path.join(journal_dir, "journal.jsonl")
+        fingerprint = {
+            "journal_version": 1, "arch": cfg.name,
+            "page_size": int(page_size), "max_len": int(max_len),
+            "temperature": float(temperature), "sample": bool(sample),
+            "eos_id": eos_id, "pad_id": int(pad_id),
+            "key": ([int(x) for x in
+                     np.asarray(base_key).reshape(-1).tolist()]
+                    if sample else None),
+        }
+        jreplay = None
+        if resume and os.path.exists(jpath) and os.path.getsize(jpath):
+            jreplay = ServeJournal.replay(jpath)
+            if jreplay.header is None:
+                raise ValueError(
+                    f"{jpath}: no intact header record — not a serve "
+                    f"journal (or its very first write was torn)")
+            check_fingerprint(jreplay.header["fingerprint"], fingerprint)
+            recovered = True
+        journal = ServeJournal(jpath, fingerprint=fingerprint,
+                               fresh=jreplay is None)
+        for i, r in enumerate(requests):
+            digest = prompt_digest(r.prompt)
+            sub = jreplay.submits.get(rids[i]) if jreplay else None
+            if sub is not None:
+                # id dedupe: same id must mean the same request — a
+                # digest/shape mismatch is id reuse, not a resume
+                if (sub["digest"] != digest or sub["gen"] != int(r.gen)
+                        or sub["i"] != i):
+                    raise ValueError(
+                        f"request_id {rids[i]!r} reused for a different "
+                        f"request (journal has index {sub['i']}, gen "
+                        f"{sub['gen']}, digest {sub['digest']})")
+            else:
+                journal.append({"t": "submit", "rid": rids[i], "i": i,
+                                "digest": digest, "gen": int(r.gen),
+                                "arrival": int(r.arrival),
+                                "priority": prio_req[i]})
+            if jreplay is None:
+                continue
+            toks = [int(x) for x in jreplay.emitted.get(rids[i], [])]
+            comp = jreplay.completes.get(rids[i])
+            # a torn flush can persist the complete record but lose the
+            # same boundary's progress lines — so the journaled *token
+            # count*, not the record's existence, decides: short streams
+            # fall to the partial-resume path and regenerate the tail
+            needed = int(comp["n"]) if comp is not None else int(r.gen)
+            if len(toks) >= needed:
+                # finished before the crash: replay, never serve twice
+                comp = comp or {}
+                replayed_tokens += needed
+                replayed_completed.append(CompletedRequest(
+                    index=i, arrival=int(r.arrival),
+                    admitted_step=int(comp.get("admitted_step", 0)),
+                    finished_step=int(comp.get("finished_step", 0)),
+                    arrived_s=float(comp.get("arrived_s", 0.0)),
+                    finished_s=float(comp.get("finished_s", 0.0)),
+                    first_token_s=float(comp.get("first_token_s", 0.0)),
+                    tokens=np.asarray(toks[:needed], np.int32),
+                    priority=prio_req[i],
+                    preemptions=int(comp.get("preemptions", 0)),
+                    replayed=True))
+                done_replayed.add(i)
+            elif toks and resumable[i] \
+                    and (not sample or rids[i] in jreplay.keys):
+                # unfinished: resume exactly as if preempted at the last
+                # journaled boundary — pending = prompt ++ emitted with
+                # the leftover budget, PRNG stream from the snapshot
+                prompt0 = np.asarray(r.prompt, np.int32).reshape(-1)
+                pending[i] = (
+                    np.concatenate([prompt0,
+                                    np.asarray(toks, np.int32)]),
+                    int(r.gen) - len(toks))
+                seed_emitted[i] = toks
+                replayed_tokens += len(toks)
+                if sample:
+                    seed_keys[i] = np.asarray(jreplay.keys[rids[i]],
+                                              np.uint32)
+            # else: nothing journaled (or stream not resumable) — the
+            # request restarts from its original prompt; its fold_in
+            # PRNG stream restarts too, so tokens still come out
+            # bit-identical, just re-generated
+        journal.flush()
+        recovery_s = time.perf_counter() - t_rec
+    if may_preempt or seed_emitted:
         prompt_pad = max(
             int(np.asarray(r.prompt).size) + (r.gen - 1 if resumable[i]
                                               else 0)
@@ -818,7 +986,7 @@ def serve_continuous(params, cfg, requests, *, slots: int,
 
     # scheduler state (host)
     order = sorted(range(len(requests)), key=lambda i: requests[i].arrival)
-    queue = list(order)
+    queue = [i for i in order if i not in done_replayed]
     slot_req = [None] * slots                      # request index per slot
     reserved = [0] * slots                         # pages reserved per slot
     plen_host = [0] * slots                        # prompt length per slot
@@ -827,13 +995,17 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     slot_prompt = [None] * slots                   # admitted pending stream
     arrived_wall = {}
     first_tok = {}
-    emitted = {i: [] for i in range(len(requests))}
+    emitted = {i: list(seed_emitted.get(i, []))
+               for i in range(len(requests))}
+    jhw = {i: len(emitted[i]) for i in emitted}    # journaled high water
     admitted_step = {}
     preempt_count = {}                             # request -> evictions
-    resume_keys = {}                               # request -> PRNG snapshot
+    resume_keys = dict(seed_keys)                  # request -> PRNG snapshot
     n_preempts = 0
-    completed = []
+    completed = list(replayed_completed)
     page_util = []
+    drain_since = None                             # wall time drain began
+    snapshot_bytes = 0
 
     # prefix-sharing host state (all empty/zero when index is None)
     pins = {}                                      # page -> 1 (index pins)
@@ -843,6 +1015,71 @@ def serve_continuous(params, cfg, requests, *, slots: int,
     prefill_tokens = 0
     shared_tokens = 0
     prefix_hits = 0
+
+    # -- snapshot/restore of the pool + prefix index (§Crash recovery) ---
+    restored_from_snapshot = False
+    snap_ckpt = None
+    snap_ord = 0
+    snap_geo = {"arch": cfg.name, "slots": int(slots),
+                "page_size": int(page_size),
+                "num_pages": int(geo.k.shape[1]),
+                "pages_per_seq": int(pages_per_seq)}
+    if journal is not None and snapshot_every > 0:
+        from repro.checkpoint.checkpointing import (Checkpointer,
+                                                    CheckpointCorrupt)
+        snap_ckpt = Checkpointer(os.path.join(journal_dir, "snapshots"),
+                                 keep=2, prefix="serve")
+        snap_ord = snap_ckpt.latest_step() or 0
+    if recovered and snap_ckpt is not None and index is not None:
+        t_rec = time.perf_counter()
+        try:
+            if snap_ckpt.latest_step() is None:
+                raise FileNotFoundError("no serve snapshot on disk")
+            loaded, snap_meta = snap_ckpt.restore(caches)
+            extra = snap_meta["extra"]
+            if extra.get("geometry") != snap_geo:
+                raise CheckpointCorrupt(
+                    f"snapshot geometry {extra.get('geometry')} != this "
+                    f"serve's {snap_geo}")
+            exp_shapes = [list(l.shape) for l in jax.tree.leaves(caches)]
+            if snap_meta["shapes"] != exp_shapes:
+                raise CheckpointCorrupt("snapshot leaf shapes changed")
+            index.load_state_dict(extra["index"])
+            new_pins = {int(p): int(c) for p, c in extra["pins"].items()}
+            # the snapshot was taken mid-serve with rows holding pages;
+            # none of those rows survive the crash, so release every row
+            # — refcounts drop to exactly the index pins — then host-
+            # check the allocator invariants before trusting any of it
+            loaded = _release_slots(loaded, jnp.ones((slots,), bool))
+            _check_paged_invariants(loaded, pins=dict(new_pins))
+            caches = loaded
+            pins = new_pins
+            restored_from_snapshot = True
+        except (CheckpointCorrupt, FileNotFoundError, AssertionError,
+                KeyError, ValueError) as e:
+            # graceful degradation: a missing/corrupt/mismatched
+            # snapshot can cost re-prefill work, never correctness —
+            # cold-start the pool and index, recover from the journal
+            if not isinstance(e, FileNotFoundError):
+                print(f"[serve] snapshot unusable ({e}); cold start "
+                      f"from journal", flush=True)
+            caches = init_caches(cfg, slots, max_len=max_len, paged=True,
+                                 page_size=page_size, num_pages=num_pages)
+            index = PrefixIndex(page_size)
+            pins = {}
+        recovery_s += time.perf_counter() - t_rec
+
+    def save_snapshot():
+        nonlocal snap_ord, snapshot_bytes
+        snap_ord += 1
+        snap_ckpt.save(snap_ord, caches, extra={
+            "kind": "serve", "geometry": snap_geo,
+            "fingerprint": fingerprint,
+            "index": index.state_dict() if index is not None else None,
+            "pins": {str(p): int(c) for p, c in pins.items()}})
+        snapshot_bytes = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(caches))
 
     state = ServeSlotState.init(slots, prompt_pad, base_key)
 
@@ -863,6 +1100,19 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             tokens=np.asarray(emitted[i][:requests[i].gen], np.int32),
             priority=prio_req[i],
             preemptions=preempt_count.get(i, 0)))
+        if journal is not None:
+            # "n" is the authoritative finished-token count: replay
+            # trusts it over the record's mere existence (a torn flush
+            # can drop this boundary's progress lines but keep this)
+            journal.append({
+                "t": "complete", "rid": rids[i],
+                "n": len(emitted[i][:requests[i].gen]),
+                "admitted_step": admitted_step[i], "finished_step": step,
+                "arrival": int(requests[i].arrival),
+                "arrived_s": arrived_wall[i], "finished_s": now_s,
+                "first_token_s": first_tok.get(i, now_s),
+                "priority": prio_req[i],
+                "preemptions": preempt_count.get(i, 0)})
         slot_req[slot] = None
         reserved[slot] = 0
         prefilling[slot] = False
@@ -907,8 +1157,63 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         queue.sort(key=lambda j: (requests[j].arrival, j))
         to_release.append(slot)
 
+    def _journal_progress(keys_np=None):
+        """Journal every request's emitted-token delta since its last
+        journaled high-water mark and, when sampling, its post-draw PRNG
+        snapshot (from the segment readback for live slots, from the
+        eviction snapshot for preempted ones) — all batched into ONE
+        progress record per boundary, so the journal's per-record cost
+        doesn't scale with slot count. The caller flushes — durability
+        is per segment boundary, not per token."""
+        slot_of = {slot_req[s]: s for s in range(slots)
+                   if slot_req[s] is not None}
+        deltas, keys = {}, {}
+        for i, toks in emitted.items():
+            if len(toks) <= jhw[i]:
+                continue
+            deltas[rids[i]] = [int(x) for x in toks[jhw[i]:]]
+            if sample:
+                if keys_np is not None and i in slot_of:
+                    keys[rids[i]] = [int(x) for x in keys_np[slot_of[i]]]
+                elif i in resume_keys:
+                    keys[rids[i]] = [int(x) for x in
+                                     np.asarray(resume_keys[i]).reshape(-1)]
+            jhw[i] = len(toks)
+        if deltas:
+            rec = {"t": "progress", "d": deltas}
+            if keys:
+                rec["k"] = keys
+            journal.append(rec)
+
     while queue or any(s is not None for s in slot_req):
         now_s = time.perf_counter() - t0
+        if injector is not None and injector.want_crash(step):
+            # process death at an admission-round boundary: everything
+            # through the previous segment's flush is durable, all
+            # in-memory state is abandoned (no flush, no cleanup).
+            # In-flight async IO (journal group commit, snapshot write)
+            # is settled first so the in-process simulation is
+            # deterministic and the restarted serve never races a
+            # "dead" writer thread — a real death mid-write leaves a
+            # torn journal tail / a .tmp snapshot dir, both of which
+            # replay and tmp+rename atomicity already make equivalent
+            # to the write never starting
+            if journal is not None:
+                journal.wait()
+            if snap_ckpt is not None:
+                snap_ckpt.wait()
+            raise SimulatedCrash(step, "round-boundary")
+        draining = drain is not None and drain.poll(step)
+        if draining:
+            if drain_since is None:
+                drain_since = time.perf_counter()
+            if all(s is None for s in slot_req):
+                break                  # nothing in flight: drain done
+            if drain_timeout is not None and \
+                    time.perf_counter() - drain_since >= drain_timeout:
+                # timeout: stop here — in-flight progress is journaled
+                # through the last boundary, a resume picks it up
+                break
         for i in queue:
             if requests[i].arrival <= step:
                 arrived_wall.setdefault(i, now_s)
@@ -936,12 +1241,15 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         adm = []
         adm_shared = {}                            # slot -> adopted pages
         evict_batch = []
-        # candidate order = admission order: SLO class first, then
-        # arrival, then trace position (a snapshot — this round's
-        # victims re-enter the queue but only become candidates next
-        # round, so preemption can never livelock within a round)
-        cand = sorted((i for i in queue if requests[i].arrival <= step),
-                      key=lambda j: (-prio_req[j], requests[j].arrival, j))
+        # candidate order = admission order: effective SLO class first
+        # (aging-adjusted, so a starved low-class request eventually
+        # outranks fresh high-class arrivals), then arrival, then trace
+        # position (a snapshot — this round's victims re-enter the queue
+        # but only become candidates next round, so preemption can never
+        # livelock within a round). Draining: admit nothing.
+        cand = [] if draining else sorted(
+            (i for i in queue if requests[i].arrival <= step),
+            key=lambda j: (-eff_prio(j, step), requests[j].arrival, j))
         for i in cand:
             if not free_slots and not preemption:
                 break
@@ -975,9 +1283,10 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                 cast = sorted(
                     (s for s in range(slots)
                      if slot_req[s] is not None
-                     and prio_req[slot_req[s]] < prio_req[i]
+                     and eff_prio(slot_req[s], step) < eff_prio(i, step)
                      and resumable[slot_req[s]]),
-                    key=lambda s: (prio_req[slot_req[s]], -reserved[s], s))
+                    key=lambda s: (eff_prio(slot_req[s], step),
+                                   -reserved[s], s))
                 gain, picked = 0, []
                 for s in cast:
                     if need <= page_budget + gain \
@@ -1041,17 +1350,17 @@ def serve_continuous(params, cfg, requests, *, slots: int,
             gens = np.zeros((slots,), np.int32)
             prios = np.zeros((slots,), np.int32)
             slot_ids = np.full((slots,), -1, np.int32)
-            rids = np.zeros((slots,), np.int32)
+            row_req = np.zeros((slots,), np.int32)
             for row, (slot, i) in enumerate(adm):
                 p, g = pending[i]
                 prompts[row, :p.size] = p
                 lengths[row] = p.size
                 gens[row] = g
-                prios[row] = prio_req[i]
+                prios[row] = eff_prio(i, step)
                 slot_ids[row] = slot
-                rids[row] = i
+                row_req[row] = i
                 plen_host[slot] = p.size
-            req_keys = fold_keys(base_key, jnp.asarray(rids))
+            req_keys = fold_keys(base_key, jnp.asarray(row_req))
             if resume_keys:
                 # resumed rows restore the PRNG snapshot taken at their
                 # eviction instead of restarting the fold_in stream — the
@@ -1172,8 +1481,24 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         # upper bound on device-held pages; no extra device sync),
         # sampled while the segment's occupants still hold their pages
         page_util.append((step, sum(reserved) / max(pool_pages, 1)))
-        toks_np, emits_np, done_np, cursor_np = jax.device_get(
-            (toks, emits, state.done, state.cursor))       # one sync
+        keys_np = None
+        if journal is not None and sample:
+            toks_np, emits_np, done_np, cursor_np, keys_np = \
+                jax.device_get((toks, emits, state.done, state.cursor,
+                                state.keys))               # one sync
+        else:
+            toks_np, emits_np, done_np, cursor_np = jax.device_get(
+                (toks, emits, state.done, state.cursor))   # one sync
+        if injector is not None and injector.want_crash_after(step):
+            # mid-segment death: the device produced this segment's
+            # tokens but the flush below never runs — the torn window.
+            # Recovery resumes from the *previous* boundary and must
+            # regenerate the lost tokens bit-identically
+            if journal is not None:
+                journal.wait()
+            if snap_ckpt is not None:
+                snap_ckpt.wait()
+            raise SimulatedCrash(step, "mid-segment")
         straggler_segs += watchdog.observe(
             time.perf_counter() - t_seg).straggler
         now_s = time.perf_counter() - t0
@@ -1225,7 +1550,26 @@ def serve_continuous(params, cfg, requests, *, slots: int,
         for s in fin:
             finish(s, now_s)
         to_release.extend(fin)
+        if journal is not None:
+            # the boundary's group-commit point: progress deltas + key
+            # snapshots + any completes land in one written batch
+            # (fsynced on the journal's bounded cadence); a crash before
+            # the *next* flush loses at most a bounded suffix of
+            # regenerable work
+            _journal_progress(keys_np)
+            journal.flush()
+            if snap_ckpt is not None and segments % snapshot_every == 0:
+                save_snapshot()
 
+    if journal is not None:
+        _journal_progress(None)
+        journal.flush()
+        if snap_ckpt is not None:
+            # final snapshot: a clean restart (drain + resume, or a new
+            # trace over the same prompts) warm-starts the prefix index
+            save_snapshot()
+            snap_ckpt.wait()
+        journal.close()
     if debug:
         _check_paged_invariants(caches, pins=dict(pins))
     wall = time.perf_counter() - t0
@@ -1235,4 +1579,11 @@ def serve_continuous(params, cfg, requests, *, slots: int,
                        prefill_tokens=prefill_tokens,
                        shared_prefix_tokens=shared_tokens,
                        prefix_hits=prefix_hits, preemptions=n_preempts,
-                       straggler_segments=straggler_segs)
+                       straggler_segments=straggler_segs,
+                       drained=drain_since is not None,
+                       recovered=recovered,
+                       restored_from_snapshot=restored_from_snapshot,
+                       replayed_tokens=replayed_tokens,
+                       snapshot_bytes=snapshot_bytes,
+                       recovery_s=recovery_s, aging_steps=aging_steps,
+                       max_class=max_class)

@@ -114,6 +114,43 @@ def test_checkpoint_gc_and_atomicity(tmp_path):
     assert not any(n.endswith(".tmp") for n in os.listdir(ck.dir))
 
 
+def test_checkpoint_prefix_namespaces_rotate_independently(tmp_path):
+    """Two checkpoint families (train steps + serve snapshots) share a
+    directory but list and GC independently via ``prefix``."""
+    train = Checkpointer(str(tmp_path / "ck"), keep=2)
+    serve = Checkpointer(str(tmp_path / "ck"), keep=2, prefix="serve")
+    for s in range(4):
+        train.save(s, {"x": jnp.ones((2,)) * s}, blocking=True)
+    serve.save(0, {"x": jnp.zeros((2,))}, blocking=True)
+    assert train.all_steps() == [2, 3]
+    assert serve.all_steps() == [0]
+    restored, meta = serve.restore({"x": jnp.zeros((2,))})
+    assert meta["step"] == 0
+    np.testing.assert_array_equal(np.asarray(restored["x"]), [0.0, 0.0])
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    """A bit-flipped leaf fails its recorded crc32 and restore raises
+    ``CheckpointCorrupt`` instead of handing back wrong bytes (the serve
+    snapshot path catches it and cold-starts from the journal)."""
+    from repro.checkpoint.checkpointing import CheckpointCorrupt
+    ck = Checkpointer(str(tmp_path / "ck5"))
+    tmpl = {"x": jnp.arange(8, dtype=jnp.float32)}
+    ck.save(1, tmpl, blocking=True)
+    restored, _ = ck.restore(tmpl)          # intact round trip first
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.arange(8, dtype=np.float32))
+    leaf = os.path.join(ck.dir, "step_00000001", "leaf_00000.npy")
+    raw = bytearray(open(leaf, "rb").read())
+    raw[-1] ^= 0xFF
+    open(leaf, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointCorrupt):
+        ck.restore(tmpl)
+    with pytest.raises(CheckpointCorrupt):  # truncation too
+        open(leaf, "wb").write(bytes(raw[: len(raw) // 2]))
+        ck.restore(tmpl)
+
+
 def test_pipeline_determinism_and_resume():
     cfg = get_config("phi3-mini-3.8b", smoke=True)
     mesh = make_host_mesh()
